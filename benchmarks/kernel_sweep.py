@@ -1,0 +1,60 @@
+"""Tile-size sweep for the Pallas matmul kernel — the paper's Section 4.3.7
+("different kernels having different TILES of size 4x4 ... 16x16") mapped to
+MXU block shapes.
+
+Wall-clock timing in interpret mode is meaningless (the kernel body runs as
+python on CPU), so each block config reports MODELED metrics derived from
+the BlockSpec structure — exactly the quantities that decide tile choice on
+TPU:
+    vmem_kib            working set (two in tiles double-buffered + acc)
+    intensity_flops_b   arithmetic intensity of one grid step
+    mxu_aligned         all dims multiples of 128?
+plus a correctness check against ref.matmul_ref at every config.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.matmul import matmul_pallas
+
+M = K = N = 1024
+BLOCKS = [(128, 128, 128), (256, 256, 256), (512, 512, 512),
+          (512, 512, 256), (256, 512, 512), (128, 512, 512),
+          (512, 128, 512)]
+
+
+def main(rows=None):
+    own = rows is None
+    rows = [] if own else rows
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.standard_normal((M, K)), jnp.bfloat16)
+    b = jnp.asarray(rng.standard_normal((K, N)), jnp.bfloat16)
+    want = np.float32(ref.matmul_ref(a, b))
+
+    for bm, bn, bk in BLOCKS:
+        got = matmul_pallas(a, b, block_m=bm, block_n=bn, block_k=bk,
+                            interpret=True)
+        err = float(np.abs(np.float32(got) - want).max())
+        rel = err / float(np.abs(want).max())
+        vmem = (2 * (bm * bk + bk * bn) * 2 + bm * bn * 4) / 1024
+        flops = 2 * bm * bn * bk
+        byts = (bm * bk + bk * bn) * 2 + bm * bn * 4
+        rows.append({
+            "name": f"matmul_block_{bm}x{bn}x{bk}",
+            "us_per_call": 0.0,   # interpret mode: structural metrics only
+            "derived": (f"vmem_kib={vmem:.0f};intensity={flops/byts:.0f};"
+                        f"mxu_aligned={all(x % 128 == 0 for x in (bm, bn, bk))};"
+                        f"rel_err={rel:.1e}"),
+        })
+    if own:
+        for r in rows:
+            print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

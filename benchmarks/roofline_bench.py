@@ -1,0 +1,47 @@
+"""Roofline summary over the dry-run sweep (assignment table g).
+
+Reads experiments/dryrun/*.json (produced by ``python -m
+repro.launch.dryrun``) and emits one CSV row per (arch x shape x mesh)
+cell: the dominant-term time and the roofline fraction
+(compute_term / dominant_term — how close the cell is to being
+compute-bound, i.e. to the matmul roofline the paper's kernel targets).
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+DRYRUN_DIR = Path(__file__).resolve().parent.parent / "experiments" / "dryrun"
+
+
+def main(rows=None):
+    own = rows is None
+    rows = [] if own else rows
+    if not DRYRUN_DIR.exists():
+        rows.append({"name": "roofline_missing", "us_per_call": 0.0,
+                     "derived": "run python -m repro.launch.dryrun first"})
+    else:
+        for f in sorted(DRYRUN_DIR.glob("*.json")):
+            r = json.loads(f.read_text())
+            if r.get("status") != "OK":
+                rows.append({"name": f.stem, "us_per_call": 0.0,
+                             "derived": f"status={r.get('status')}"})
+                continue
+            dom_t = max(r["compute_s"], r["memory_s"], r["collective_s"])
+            frac = r["compute_s"] / dom_t if dom_t else 0.0
+            rows.append({
+                "name": f.stem,
+                "us_per_call": dom_t * 1e6,
+                "derived": (f"dom={r['dominant']};roofline_frac={frac:.3f};"
+                            f"useful={r['useful_ratio']:.2f};"
+                            f"fits16g={r.get('fits_16gb')}"),
+            })
+    if own:
+        for r in rows:
+            print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,35 @@
+"""Benchmark harness — one module per paper table/figure + system benches.
+
+    PYTHONPATH=src python -m benchmarks.run
+
+Prints ``name,us_per_call,derived`` CSV (one row per measurement):
+  * paper_tables       — Tables 2-5 of the paper (size x power grid),
+                         naive vs binary exponentiation + TPU projections
+  * kernel_sweep       — the paper's tile-size sweep on the Pallas kernel
+  * distributed_bench  — Cannon vs gather collective matmul (4-dev CPU)
+  * roofline_bench     — per (arch x shape x mesh) dominant term from the
+                         dry-run artifacts
+"""
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+from benchmarks import paper_tables, kernel_sweep, distributed_bench, \
+    roofline_bench
+
+
+def main() -> None:
+    rows = []
+    paper_tables.main(rows)
+    kernel_sweep.main(rows)
+    distributed_bench.main(rows)
+    roofline_bench.main(rows)
+    print("name,us_per_call,derived")
+    for r in rows:
+        print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,45 @@
+"""End-to-end training driver example (assignment deliverable b).
+
+Default: a ~15M-param Mamba-2 (the paper-hook architecture — its SSD scan
+uses the log-depth prefix products) for 300 steps on the synthetic stream,
+with checkpointing every 100 steps. Loss should fall from ~5.5 to <4.5 on
+one CPU core in a few minutes.
+
+    PYTHONPATH=src python examples/train_lm.py
+    PYTHONPATH=src python examples/train_lm.py --full   # real mamba2-130m
+
+Kill it mid-run and re-launch: it resumes from the checkpoint (params,
+optimizer moments, and data-stream position all restore).
+"""
+
+import argparse
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+from repro.launch import train as train_driver  # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="train the real mamba2-130m config (slow on CPU)")
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    argv = ["--arch", "mamba2-130m",
+            "--steps", str(args.steps),
+            "--batch", "8", "--seq", "128",
+            "--lr", "3e-3",
+            "--ckpt-dir", args.ckpt_dir,
+            "--ckpt-every", "100",
+            "--log-every", "20"]
+    if not args.full:
+        argv.append("--smoke")
+    raise SystemExit(train_driver.main(argv))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+"""repro.analysis — roofline from compiled dry-run artifacts."""

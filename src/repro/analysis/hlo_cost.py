@@ -1,0 +1,624 @@
+"""Trip-count-aware HLO cost analyzer.
+
+XLA's ``compiled.cost_analysis()`` visits a ``while`` body ONCE, so any
+program built on ``lax.scan`` (our layer stacks, microbatch accumulation,
+attention chunking, CE chunking) under-reports FLOPs/bytes/collectives by
+the loop trip counts. This module parses the post-SPMD HLO text, recovers
+every while loop's trip count from its condition computation (jax scans
+lower to ``compare(induction, constant(T)), direction=LT``), and walks the
+call graph multiplying costs through nested loops.
+
+Accounting model (per device — the SPMD module is per-device):
+  * FLOPs: 2*M*N*K for every ``dot`` (batch dims folded into M), and
+    2*out*window for ``convolution``. Elementwise FLOPs are ignored — the
+    MXU roofline term is a matmul roofline (documented in EXPERIMENTS.md).
+  * Bytes: for every materializing instruction (fusions, dots, collectives,
+    copies, ...): sum(operand sizes) + result size. Post-fusion HLO keeps
+    fusion internals in registers/VMEM, so operand+result of each top-level
+    instruction is the HBM-traffic model. Bookkeeping ops (tuple, gte,
+    parameter, constant, bitcast) are free.
+  * Collectives: wire bytes per kind with ring multipliers (see
+    repro.analysis.roofline), times the enclosing loops' trip counts.
+
+Validated against compiled.cost_analysis() on scan-free programs in
+tests/test_hlo_cost.py (dot FLOPs match exactly).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+__all__ = ["HloCost", "analyze_hlo"]
+
+_DTYPE_BYTES = {
+    "pred": 1, "s2": 1, "u2": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e3m4": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "token": 0, "opaque": 0,
+}
+
+_FREE_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota",
+}
+_CONTROL_OPS = {"while", "call", "conditional"}
+
+_COMP_HEADER = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->.*\{\s*$")
+_INSTR = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(\(.*?\)|[\w\[\],\s\{\}]+?)\s+"
+    r"([\w\-]+)\((.*)$")
+_SHAPE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OPERAND = re.compile(r"%([\w\.\-]+)")
+_WHILE_ATTRS = re.compile(r"condition=%?([\w\.\-]+),\s*body=%?([\w\.\-]+)")
+_CALL_TARGET = re.compile(r"(?:to_apply|calls)=%?([\w\.\-]+)")
+_BRANCHES = re.compile(r"branch_computations=\{([^}]*)\}")
+_CONST_INT = re.compile(r"constant\((\d+)\)")
+
+
+def _shape_size_bytes(type_str: str) -> int:
+    """Total bytes of a (possibly tuple) HLO type string."""
+    total = 0
+    for dtype, dims in _SHAPE.findall(type_str):
+        n = 1
+        if dims.strip():
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES.get(dtype, 4)
+    return total
+
+
+def _shape_dims(type_str: str) -> Optional[Tuple[str, List[int]]]:
+    m = _SHAPE.search(type_str)
+    if not m:
+        return None
+    dtype, dims = m.groups()
+    dims = [int(d) for d in dims.split(",")] if dims.strip() else []
+    return dtype, dims
+
+
+@dataclasses.dataclass
+class _Instr:
+    name: str
+    type_str: str
+    op: str
+    rest: str          # everything after the opening paren
+
+
+@dataclasses.dataclass
+class _Computation:
+    name: str
+    instrs: List[_Instr]
+    shapes: Dict[str, str]      # instr name -> result type string
+
+
+def _parse_computations(text: str) -> Dict[str, _Computation]:
+    comps: Dict[str, _Computation] = {}
+    cur: Optional[_Computation] = None
+    entry_name = None
+    for line in text.splitlines():
+        if cur is None:
+            m = _COMP_HEADER.match(line.strip())
+            if m:
+                cur = _Computation(m.group(1), [], {})
+                if line.strip().startswith("ENTRY"):
+                    entry_name = m.group(1)
+            continue
+        if line.strip() == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _INSTR.match(line)
+        if m:
+            name, type_str, op, rest = m.groups()
+            cur.instrs.append(_Instr(name, type_str.strip(), op, rest))
+            cur.shapes[name] = type_str.strip()
+    if entry_name is not None:
+        comps["__entry__"] = comps[entry_name]
+    return comps
+
+
+def _operands(instr: _Instr, limit: Optional[int] = None) -> List[str]:
+    """Operand instruction names (stops at the closing paren heuristically)."""
+    # cut at '), ' attribute boundary: operands live before the first `)`
+    # that closes the call — post-opt HLO operand lists contain only %refs.
+    depth = 1
+    end = len(instr.rest)
+    for i, ch in enumerate(instr.rest):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                end = i
+                break
+    ops = _OPERAND.findall(instr.rest[:end])
+    return ops[:limit] if limit else ops
+
+
+def _dot_flops(instr: _Instr, comp: _Computation) -> float:
+    out = _shape_dims(instr.type_str)
+    if out is None:
+        return 0.0
+    _, out_dims = out
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", instr.rest)
+    ops = _operands(instr, limit=2)
+    if not ops:
+        return 0.0
+    lhs_type = comp.shapes.get(ops[0])
+    if lhs_type is None:
+        return 0.0
+    lhs = _shape_dims(lhs_type)
+    if lhs is None:
+        return 0.0
+    _, lhs_dims = lhs
+    k = 1
+    if m and m.group(1).strip():
+        for d in m.group(1).split(","):
+            k *= lhs_dims[int(d)]
+    out_n = 1
+    for d in out_dims:
+        out_n *= d
+    return 2.0 * out_n * k
+
+
+def _conv_flops(instr: _Instr, comp: _Computation) -> float:
+    out = _shape_dims(instr.type_str)
+    ops = _operands(instr, limit=2)
+    if out is None or len(ops) < 2:
+        return 0.0
+    rhs_type = comp.shapes.get(ops[1])
+    rhs = _shape_dims(rhs_type) if rhs_type else None
+    if rhs is None:
+        return 0.0
+    out_n = 1
+    for d in out[1]:
+        out_n *= d
+    rhs_n = 1
+    for d in rhs[1]:
+        rhs_n *= d
+    # 2 * out_elems * (kernel elems per output channel)
+    out_feat = out[1][-1] if out[1] else 1
+    return 2.0 * out_n * max(rhs_n // max(out_feat, 1), 1)
+
+
+def _trip_count(cond: _Computation) -> Optional[int]:
+    """jax scans: ROOT compare(gte(induction), constant(T)), direction=LT."""
+    consts = {}
+    for ins in cond.instrs:
+        m = _CONST_INT.search(ins.op + "(" + ins.rest)
+        if ins.op == "constant":
+            mm = re.search(r"constant\((\d+)\)", "constant(" + ins.rest)
+            if mm:
+                consts[ins.name] = int(mm.group(1))
+    for ins in cond.instrs:
+        if ins.op == "compare" and "direction=LT" in ins.rest:
+            for op_name in _operands(ins):
+                if op_name in consts:
+                    return consts[op_name]
+    # fallback: any integer constant in the condition
+    if len(consts) == 1:
+        return next(iter(consts.values()))
+    return None
+
+
+_COLL_KINDS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+def _collective_wire_bytes(instr: _Instr, n_devices: int) -> Tuple[str, float]:
+    kind = instr.op.replace("-start", "").replace("-done", "")
+    if kind not in _COLL_KINDS or instr.op.endswith("-done"):
+        return "", 0.0
+    size = _shape_size_bytes(instr.type_str)
+    if instr.op.endswith("-start"):
+        size //= 2          # tuple of (operand, result)
+    g = n_devices
+    m = _GROUPS_RE.search(instr.rest)
+    if m:
+        g = int(m.group(2))
+    else:
+        m = _GROUPS_LIST_RE.search(instr.rest)
+        if m:
+            g = len(m.group(1).split(","))
+    if g <= 1:
+        return "", 0.0
+    if kind == "all-gather":
+        wire = size * (g - 1) / g
+    elif kind == "all-reduce":
+        wire = 2 * size * (g - 1) / g
+    elif kind == "reduce-scatter":
+        wire = size * (g - 1)
+    elif kind == "all-to-all":
+        wire = size * (g - 1) / g
+    else:
+        wire = float(size)
+    return kind, wire
+
+
+_SKIP_BYTES_OPS = {"copy-done", "all-gather-done", "all-reduce-done",
+                   "collective-permute-done", "domain", "reshape",
+                   "optimization-barrier"}
+
+
+def _dus_bytes(update_type: Optional[str], other_operands_bytes: int) -> float:
+    """dynamic-update-slice is in-place: traffic = write the update slice
+    (+ its read) + tiny indices, NOT the full buffer."""
+    ub = _shape_size_bytes(update_type) if update_type else 0
+    return 2.0 * ub + other_operands_bytes
+
+
+def _instr_bytes(ins: _Instr, comp: _Computation,
+                 comps: Dict[str, "_Computation"]) -> float:
+    """HBM traffic of one top-level instruction.
+
+    Default: sum(operand sizes) + result size. In-place / sparse-access ops
+    are special-cased so scan stack-writes don't get charged the full
+    carried buffer every iteration (which would be O(depth^2)):
+      dynamic-update-slice -> 2 x update-slice bytes
+      dynamic-slice        -> 2 x result bytes
+      gather               -> 2 x result + indices
+      scatter              -> 3 x updates (read+write touched region) + idx
+    Fusions whose ROOT is one of these get the same treatment.
+    """
+    op = ins.op
+    if op in _SKIP_BYTES_OPS:
+        return 0.0
+
+    def operand_types():
+        return [comp.shapes.get(o) for o in _operands(ins)]
+
+    if op == "dynamic-update-slice":
+        ts = operand_types()
+        upd = ts[1] if len(ts) > 1 else None
+        return _dus_bytes(upd, 0)
+    if op == "dynamic-slice":
+        return 2.0 * _shape_size_bytes(ins.type_str)
+    if op == "gather":
+        ts = operand_types()
+        idx = _shape_size_bytes(ts[1]) if len(ts) > 1 and ts[1] else 0
+        return 2.0 * _shape_size_bytes(ins.type_str) + idx
+    if op == "scatter":
+        ts = operand_types()
+        upd = _shape_size_bytes(ts[2]) if len(ts) > 2 and ts[2] else 0
+        idx = _shape_size_bytes(ts[1]) if len(ts) > 1 and ts[1] else 0
+        return 3.0 * upd + idx
+
+    if op == "fusion":
+        m = _CALL_TARGET.search(ins.rest)
+        fcomp = comps.get(m.group(1)) if m else None
+        if fcomp is not None and fcomp.instrs:
+            root = fcomp.instrs[-1]
+            if root.op == "dynamic-update-slice":
+                # charge the update slice + NON-aliased fusion operands
+                root_ops = _operands(root)
+                upd_t = fcomp.shapes.get(root_ops[1]) if len(root_ops) > 1 \
+                    else None
+                other = 0
+                res_b = _shape_size_bytes(ins.type_str)
+                for t in operand_types():
+                    if t and _shape_size_bytes(t) != res_b:
+                        other += _shape_size_bytes(t)
+                return _dus_bytes(upd_t, other)
+            if root.op == "dynamic-slice":
+                small = _shape_size_bytes(ins.type_str)
+                other = sum(_shape_size_bytes(t) for t in operand_types()
+                            if t and _shape_size_bytes(t) <= small)
+                return 2.0 * small + other
+            if root.op == "convert":
+                # XLA:CPU wraps scan-stash writes as
+                # convert(DUS(convert(buf), update)) — a full-buffer dtype
+                # round-trip a TPU lowering does in place. Charge the
+                # update slice only (backend-artifact normalization,
+                # EXPERIMENTS.md caveat C1).
+                dus = [i for i in fcomp.instrs
+                       if i.op == "dynamic-update-slice"]
+                if len(dus) == 1:
+                    root_ops = _operands(root, limit=1)
+                    if root_ops and root_ops[0] == dus[0].name:
+                        dus_ops = _operands(dus[0])
+                        upd_t = fcomp.shapes.get(dus_ops[1]) \
+                            if len(dus_ops) > 1 else None
+                        return _dus_bytes(upd_t, 0)
+            # General case: a fusion PARAMETER consumed only by
+            # dynamic-slice/gather ops inside the fused computation is a
+            # sliced view — charge the slice(s), not the whole buffer.
+            # (This is how remat-stash reads appear: an elementwise bwd
+            # fusion with an internal dynamic-slice of the (L, ...) stash.
+            # Charging the full stash per layer would be O(L^2).)
+            ob = 0.0
+            ops_list = _operands(ins)
+            sliced = _fusion_param_slice_bytes(fcomp)
+            for idx, o in enumerate(ops_list):
+                t = comp.shapes.get(o)
+                if t is None:
+                    continue
+                full = _shape_size_bytes(t)
+                ob += min(full, sliced.get(idx, full))
+            return _shape_size_bytes(ins.type_str) + ob
+
+    rb = _shape_size_bytes(ins.type_str)
+    ob = sum(_shape_size_bytes(t) for t in operand_types() if t)
+    return rb + ob
+
+
+def _fusion_param_slice_bytes(fcomp: "_Computation") -> Dict[int, float]:
+    """For each fused-computation parameter index: total bytes actually
+    read, when every consumer is a slicing op (dynamic-slice / gather /
+    slice). Absent index -> consumer reads the full buffer."""
+    # map param name -> index
+    param_idx = {}
+    for ins in fcomp.instrs:
+        if ins.op == "parameter":
+            m = re.match(r"(\d+)", ins.rest)
+            if m:
+                param_idx[ins.name] = int(m.group(1))
+    consumers: Dict[str, List[_Instr]] = {}
+    for ins in fcomp.instrs:
+        for o in _operands(ins):
+            consumers.setdefault(o, []).append(ins)
+    out: Dict[int, float] = {}
+    for pname, idx in param_idx.items():
+        cons = consumers.get(pname, [])
+        if not cons:
+            out[idx] = 0.0
+            continue
+        if all(c.op in ("dynamic-slice", "gather", "slice") for c in cons):
+            out[idx] = float(sum(_shape_size_bytes(c.type_str)
+                                 for c in cons))
+    return out
+
+
+@dataclasses.dataclass
+class HloCost:
+    flops: float
+    bytes: float
+    collective_bytes: float
+    collectives: Dict[str, dict]
+    unknown_trip_counts: int
+
+    def to_dict(self):
+        return dataclasses.asdict(self)
+
+
+_ELEMENTWISE_OPS = {
+    "add", "subtract", "multiply", "divide", "convert", "select", "compare",
+    "exponential", "tanh", "maximum", "minimum", "negate", "rsqrt", "sqrt",
+    "log", "power", "and", "or", "not", "xor", "abs", "sign", "floor",
+    "ceil", "clamp", "reduce", "broadcast", "exponential-minus-one",
+    "log-plus-one", "logistic",
+}
+
+
+def _is_elementwise_node(ins: _Instr, comps) -> bool:
+    """Would a TPU fusion keep this node's output out of HBM when its
+    consumer is also elementwise? kLoop fusions without dots qualify."""
+    if ins.op in _ELEMENTWISE_OPS:
+        return True
+    if ins.op == "fusion":
+        m = _CALL_TARGET.search(ins.rest)
+        fc = comps.get(m.group(1)) if m else None
+        if fc is None:
+            return False
+        for fins in fc.instrs:
+            if fins.op in ("dot", "convolution", "dynamic-update-slice",
+                           "dynamic-slice", "scatter", "gather", "sort",
+                           "transpose"):
+                return False
+        return True
+    return False
+
+
+def _region_cluster_bytes(comp: _Computation, comps,
+                          is_marked) -> Tuple[float, set]:
+    """HBM traffic of a fused-kernel region (e.g. flash attention).
+
+    All marked instructions count as ONE kernel: traffic = external operand
+    reads (once per operand name; slice-sized for dynamic-slice views, the
+    kernel streams tiles) + results consumed by unmarked instructions.
+    Intermediates (scores, probs, running stats) are VMEM-resident -> free.
+    """
+    marked = {ins.name: ins for ins in comp.instrs
+              if is_marked(ins) and ins.op not in _FREE_OPS
+              and ins.op not in _CONTROL_OPS}
+    if not marked:
+        return 0.0, set()
+    consumers: Dict[str, List[str]] = {}
+    for ins in comp.instrs:
+        for op_name in _operands(ins):
+            consumers.setdefault(op_name, []).append(ins.name)
+
+    inputs: Dict[str, float] = {}
+    out_bytes = 0.0
+    root_name = comp.instrs[-1].name if comp.instrs else None
+    for name, ins in marked.items():
+        ext_ops = [o for o in _operands(ins) if o not in marked]
+        if ins.op == "dynamic-slice" or (
+                ins.op == "fusion" and _fusion_root_op(ins, comps)
+                == "dynamic-slice"):
+            # tile view of an external buffer: the kernel DMAs the tile
+            inputs[name + ":slice"] = float(_shape_size_bytes(ins.type_str))
+        else:
+            for o in ext_ops:
+                t = comp.shapes.get(o)
+                if t:
+                    inputs.setdefault(o, float(_shape_size_bytes(t)))
+        cons = consumers.get(name, [])
+        if name == root_name or not cons or any(c not in marked
+                                                for c in cons):
+            out_bytes += _shape_size_bytes(ins.type_str)
+    return sum(inputs.values()) + out_bytes, set(marked)
+
+
+def _fusion_root_op(ins: _Instr, comps) -> str:
+    m = _CALL_TARGET.search(ins.rest)
+    fc = comps.get(m.group(1)) if m else None
+    return fc.instrs[-1].op if fc and fc.instrs else ""
+
+
+def _elementwise_cluster_bytes(comp: _Computation, comps,
+                               skip=None) -> Tuple[float, set]:
+    """TPU-fusion-idealized traffic for elementwise chains in ``comp``.
+
+    Connected elementwise nodes (producer->consumer) are charged as ONE
+    fused region: external operand reads + outputs read by non-elementwise
+    consumers. Returns (bytes, names_of_clustered_nodes). ``skip``: an
+    optional predicate marking instructions charged elsewhere (fused-kernel
+    regions) — they join clusters but contribute no bytes.
+    """
+    ew = {ins.name: ins for ins in comp.instrs
+          if _is_elementwise_node(ins, comps) and not (skip and skip(ins))}
+    if not ew:
+        return 0.0, set()
+    # consumers map (within this computation)
+    consumers: Dict[str, List[str]] = {}
+    for ins in comp.instrs:
+        for op_name in _operands(ins):
+            consumers.setdefault(op_name, []).append(ins.name)
+
+    # union-find over elementwise edges
+    parent = {n: n for n in ew}
+
+    def find(a):
+        while parent[a] != a:
+            parent[a] = parent[parent[a]]
+            a = parent[a]
+        return a
+
+    def union(a, b):
+        ra, rb = find(a), find(b)
+        if ra != rb:
+            parent[ra] = rb
+
+    for name, ins in ew.items():
+        for op_name in _operands(ins):
+            if op_name in ew:
+                union(name, op_name)
+
+    root_name = comp.instrs[-1].name if comp.instrs else None
+    clusters: Dict[str, dict] = {}
+    for name, ins in ew.items():
+        c = clusters.setdefault(find(name), {"in": {}, "out": 0.0})
+        for op_name in _operands(ins):
+            if op_name in ew and find(op_name) == find(name):
+                continue                     # internal edge: stays fused
+            t = comp.shapes.get(op_name)
+            if t:
+                c["in"][op_name] = _shape_size_bytes(t)
+        cons = consumers.get(name, [])
+        external = [c2 for c2 in cons
+                    if not (c2 in ew and find(c2) == find(name))]
+        if external or name == root_name or not cons:
+            c["out"] += _shape_size_bytes(ins.type_str)
+
+    total = sum(sum(c["in"].values()) + c["out"] for c in clusters.values())
+    return float(total), set(ew)
+
+
+#: jax-level function names whose instructions live inside the Pallas
+#: flash-attention kernel on TPU (repro.kernels.attention): their
+#: intermediates (scores, probs, running stats) stay in VMEM, so the
+#: fused-kernel roofline model drops their HBM byte charges while keeping
+#: their dot FLOPs. Used by the `fusedattn` dry-run variant.
+FUSED_ATTENTION_MARKERS = ("flash_attention_core",)
+
+
+def analyze_hlo(text: str, n_devices: int,
+                fused_markers: tuple = ()) -> HloCost:
+    comps = _parse_computations(text)
+    entry = comps.get("__entry__")
+    if entry is None:
+        return HloCost(0.0, 0.0, 0.0, {}, 0)
+
+    total = {"flops": 0.0, "bytes": 0.0, "cbytes": 0.0}
+    colls: Dict[str, dict] = {}
+    unknown = [0]
+    visited_stack = set()
+    cluster_cache: Dict[str, Tuple[float, set]] = {}
+
+    def _fused(ins: _Instr) -> bool:
+        return any(m in ins.rest for m in fused_markers)
+
+    region_cache: Dict[str, Tuple[float, set]] = {}
+
+    def visit(comp: _Computation, mult: float):
+        if comp.name in visited_stack:     # recursion guard
+            return
+        visited_stack.add(comp.name)
+        if comp.name not in cluster_cache:
+            cluster_cache[comp.name] = _elementwise_cluster_bytes(
+                comp, comps, skip=_fused if fused_markers else None)
+        ew_bytes, ew_names = cluster_cache[comp.name]
+        total["bytes"] += mult * ew_bytes
+        region_names: set = set()
+        if fused_markers:
+            if comp.name not in region_cache:
+                region_cache[comp.name] = _region_cluster_bytes(
+                    comp, comps, _fused)
+            r_bytes, region_names = region_cache[comp.name]
+            total["bytes"] += mult * r_bytes
+        for ins in comp.instrs:
+            if ins.op in _FREE_OPS:
+                continue
+            if ins.op == "while":
+                attrs = _WHILE_ATTRS.search(ins.rest)
+                if attrs:
+                    cond_name, body_name = attrs.groups()
+                    trips = _trip_count(comps[cond_name]) if cond_name in \
+                        comps else None
+                    if trips is None:
+                        trips = 1
+                        unknown[0] += 1
+                    if body_name in comps:
+                        visit(comps[body_name], mult * trips)
+                continue
+            if ins.op == "conditional":
+                m = _BRANCHES.search(ins.rest)
+                if m:
+                    for b in m.group(1).split(","):
+                        b = b.strip().lstrip("%")
+                        if b in comps:
+                            visit(comps[b], mult)
+                continue
+            if ins.op in ("call", "async-start"):
+                m = _CALL_TARGET.search(ins.rest)
+                if m and m.group(1) in comps:
+                    visit(comps[m.group(1)], mult)
+                continue
+
+            # ---- FLOPs ----
+            if ins.op == "dot":
+                total["flops"] += mult * _dot_flops(ins, comp)
+            elif ins.op == "convolution":
+                total["flops"] += mult * _conv_flops(ins, comp)
+            elif ins.op == "fusion":
+                m = _CALL_TARGET.search(ins.rest)
+                if m and m.group(1) in comps:
+                    fcomp = comps[m.group(1)]
+                    for fins in fcomp.instrs:
+                        if fins.op == "dot":
+                            total["flops"] += mult * _dot_flops(fins, fcomp)
+                        elif fins.op == "convolution":
+                            total["flops"] += mult * _conv_flops(fins, fcomp)
+
+            # ---- collectives ----
+            kind, wire = _collective_wire_bytes(ins, n_devices)
+            if wire > 0:
+                total["cbytes"] += mult * wire
+                slot = colls.setdefault(kind, {"count": 0.0, "bytes": 0.0})
+                slot["count"] += mult
+                slot["bytes"] += mult * wire
+
+            # ---- bytes (HBM traffic model, in-place + fusion aware) ----
+            if ins.name in ew_names or ins.name in region_names:
+                continue                     # charged via its cluster/region
+            total["bytes"] += mult * _instr_bytes(ins, comp, comps)
+        visited_stack.discard(comp.name)
+
+    visit(entry, 1.0)
+    return HloCost(total["flops"], total["bytes"], total["cbytes"], colls,
+                   unknown[0])

@@ -1,0 +1,38 @@
+"""Architecture registry: ``get_config(name)`` / ``get_config(name, smoke=True)``.
+
+All ten assigned architectures plus the paper's own workload config.
+"""
+
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import (
+    ArchConfig, ShapeSpec, SHAPES, input_specs, cache_specs, shape_applicable,
+)
+
+_MODULES = {
+    "mixtral-8x7b": "repro.configs.mixtral_8x7b",
+    "grok-1-314b": "repro.configs.grok_1_314b",
+    "qwen3-1.7b": "repro.configs.qwen3_1_7b",
+    "starcoder2-15b": "repro.configs.starcoder2_15b",
+    "granite-34b": "repro.configs.granite_34b",
+    "qwen1.5-110b": "repro.configs.qwen1_5_110b",
+    "whisper-base": "repro.configs.whisper_base",
+    "zamba2-1.2b": "repro.configs.zamba2_1_2b",
+    "llava-next-mistral-7b": "repro.configs.llava_next_mistral_7b",
+    "mamba2-130m": "repro.configs.mamba2_130m",
+}
+
+ARCH_NAMES = tuple(_MODULES)
+
+
+def get_config(name: str, smoke: bool = False) -> ArchConfig:
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_MODULES)}")
+    mod = importlib.import_module(_MODULES[name])
+    return mod.SMOKE if smoke else mod.CONFIG
+
+
+__all__ = ["ArchConfig", "ShapeSpec", "SHAPES", "input_specs", "cache_specs",
+           "shape_applicable", "get_config", "ARCH_NAMES"]

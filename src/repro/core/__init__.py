@@ -1,0 +1,28 @@
+"""repro.core — the paper's contribution as a composable JAX library.
+
+Matrix exponentiation by squaring (O(N) -> O(log N) multiplies), its traced
+and mesh-sharded forms, the scaling-and-squaring matrix exponential built on
+it, and the log-depth prefix-product scan that carries the same insight into
+the SSM architectures.
+"""
+
+from repro.core.matpow import (
+    matpow_naive,
+    matpow_binary,
+    matpow_binary_traced,
+    matmul_backend,
+)
+from repro.core.expm import expm
+from repro.core.scan import prefix_scan, prefix_products, decay_prefix
+from repro.core.distributed import (
+    matmul_2d_gather,
+    matmul_cannon,
+    sharded_matmul,
+    matpow_sharded,
+)
+
+__all__ = [
+    "matpow_naive", "matpow_binary", "matpow_binary_traced", "matmul_backend",
+    "expm", "prefix_scan", "prefix_products", "decay_prefix",
+    "matmul_2d_gather", "matmul_cannon", "sharded_matmul", "matpow_sharded",
+]

@@ -1,0 +1,89 @@
+"""Log-depth prefix products — the paper's doubling trick, generalized.
+
+Exponentiation by squaring computes A^n in O(log n) multiplies because matrix
+multiplication is associative. The identical insight gives *all* prefix
+products of a chain A_1, A_2, ..., A_T in O(log T) parallel depth
+(Blelloch / Hillis-Steele doubling), which is how this framework applies the
+paper's technique inside the Mamba-2 SSD blocks (inter-chunk state
+recurrence) of the assigned `mamba2-130m` / `zamba2-1.2b` architectures.
+
+``prefix_products``   : cumulative products of a stack of matrices, log depth.
+``prefix_scan``       : generic inclusive scan with any associative combine,
+                        implemented by doubling (jnp ops only, jit-safe).
+``decay_prefix``      : the scalar/diagonal specialization used by SSD
+                        (cumulative products of per-step decay factors).
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["prefix_scan", "prefix_products", "decay_prefix"]
+
+
+def prefix_scan(x, combine: Callable, axis: int = 0):
+    """Inclusive scan along ``axis`` using Hillis–Steele doubling.
+
+    ``x`` may be an array or a pytree of arrays sharing the scan-axis length
+    (e.g. the SSD inter-chunk operator (decay, state-increment)).
+    ``combine(older, newer)`` must be associative; it receives slices where
+    ``older`` accumulates values ending ``offset`` steps earlier. Depth is
+    ceil(log2 T) combines — the paper's O(N) -> O(log N) reduction applied
+    to a running chain instead of a single power.
+    """
+    leaves, treedef = jax.tree.flatten(x)
+    moved = [jnp.moveaxis(l, axis, 0) for l in leaves]
+    t = moved[0].shape[0]
+
+    def take(ls, sl):
+        return jax.tree.unflatten(treedef, [l[sl] for l in ls])
+
+    offset = 1
+    while offset < t:
+        older = take(moved, slice(None, -offset))
+        newer = take(moved, slice(offset, None))
+        combined = jax.tree.flatten(combine(older, newer))[0]
+        moved = [jnp.concatenate([l[:offset], c], axis=0)
+                 for l, c in zip(moved, combined)]
+        offset <<= 1
+    out = [jnp.moveaxis(l, 0, axis) for l in moved]
+    return jax.tree.unflatten(treedef, out)
+
+
+def prefix_products(mats: jax.Array, *, axis: int = 0, reverse: bool = False) -> jax.Array:
+    """All cumulative matrix products P_i = A_i @ A_{i-1} @ ... @ A_1.
+
+    ``mats``: (..., T, m, m) stack along ``axis`` (default leading). Returns
+    the same shape where slot i holds the product of slots [0..i] (or [i..T-1]
+    if ``reverse``). log2(T) batched-matmul depth.
+
+    Convention: products apply *left-to-right in time*, i.e. newer matrices
+    multiply from the LEFT (state_i = A_i @ state_{i-1}).
+    """
+    if mats.shape[-1] != mats.shape[-2]:
+        raise ValueError(f"prefix_products needs square matrices, got {mats.shape}")
+
+    def combine(older, newer):
+        # newer @ older: the later matrix applies after (left of) the earlier.
+        return jnp.matmul(newer, older, preferred_element_type=mats.dtype)
+
+    if reverse:
+        flipped = jnp.flip(mats, axis=axis)
+        def combine_r(older, newer):
+            return jnp.matmul(older, newer, preferred_element_type=mats.dtype)
+        return jnp.flip(prefix_scan(flipped, combine_r, axis=axis), axis=axis)
+    return prefix_scan(mats, combine, axis=axis)
+
+
+def decay_prefix(log_decay: jax.Array, axis: int = -1) -> jax.Array:
+    """Cumulative sums of log-decays (= log of cumulative decay products).
+
+    The SSD inter-chunk recurrence uses scalar-per-head decays a_t in (0, 1];
+    cumulative products of scalars are exp(cumsum(log a)) — the diagonal
+    specialization of :func:`prefix_products`. Kept in log space for
+    stability over 500k-step chains.
+    """
+    return jnp.cumsum(log_decay, axis=axis)

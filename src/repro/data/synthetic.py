@@ -1,0 +1,75 @@
+"""Deterministic synthetic token pipeline — shard-disjoint, resumable.
+
+Training at 1000+ nodes needs a data pipeline whose position is part of the
+checkpoint (no replay/skip on restart) and whose per-host shards are
+disjoint by construction. This generator is counter-based (stateless
+PRNG keyed by (seed, step, host)), so:
+  * any host can compute its shard for any step without coordination;
+  * restoring `step` resumes the exact stream;
+  * elastic restarts with a different host count re-partition cleanly.
+
+The stream is a Zipf-ish unigram mix with short-range repetition structure
+(so cross-entropy actually falls during the example runs — pure uniform
+tokens would train to a flat floor immediately).
+"""
+
+from __future__ import annotations
+
+from typing import Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["SyntheticStream", "make_batch"]
+
+
+def make_batch(cfg, *, step: int, seed: int = 0, host: int = 0,
+               n_hosts: int = 1, batch: int = 8, seq: int = 128):
+    """One (tokens, targets) host-shard batch for ``step``. Pure function."""
+    key = jax.random.fold_in(
+        jax.random.fold_in(jax.random.PRNGKey(seed), step), host)
+    b = batch // n_hosts
+    v = cfg.vocab_size
+    k1, k2, k3 = jax.random.split(key, 3)
+    # Zipf-ish marginals via squared uniform exponent
+    u = jax.random.uniform(k1, (b, seq + 1))
+    base = (u ** 4 * (v - 3)).astype(jnp.int32) + 3
+    # repetition structure: with p=0.5 copy the token from `lag` back
+    lag = jax.random.randint(k2, (b, 1), 1, 64)
+    idx = jnp.arange(seq + 1)[None, :]
+    src = jnp.clip(idx - lag, 0, seq)
+    copy = jnp.take_along_axis(base, src, axis=1)
+    mask = jax.random.bernoulli(k3, 0.5, (b, seq + 1))
+    toks = jnp.where(mask & (idx >= lag), copy, base)
+    return {"tokens": toks[:, :-1].astype(jnp.int32),
+            "targets": toks[:, 1:].astype(jnp.int32)}
+
+
+class SyntheticStream:
+    """Stateful iterator wrapper with checkpointable position."""
+
+    def __init__(self, cfg, *, seed: int = 0, host: int = 0,
+                 n_hosts: int = 1, batch: int = 8, seq: int = 128,
+                 start_step: int = 0):
+        self.cfg = cfg
+        self.seed, self.host, self.n_hosts = seed, host, n_hosts
+        self.batch, self.seq = batch, seq
+        self.step = start_step
+
+    def __iter__(self) -> Iterator[dict]:
+        return self
+
+    def __next__(self) -> dict:
+        out = make_batch(self.cfg, step=self.step, seed=self.seed,
+                         host=self.host, n_hosts=self.n_hosts,
+                         batch=self.batch, seq=self.seq)
+        self.step += 1
+        return out
+
+    def state_dict(self) -> dict:
+        return {"step": self.step, "seed": self.seed}
+
+    def load_state_dict(self, st: dict):
+        self.step = int(st["step"])
+        self.seed = int(st["seed"])

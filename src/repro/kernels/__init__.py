@@ -1,0 +1,12 @@
+"""repro.kernels — Pallas TPU kernels for the compute hot-spots.
+
+matmul.py    : the paper's tiled matmul kernel, adapted to MXU/VMEM.
+attention.py : flash attention (causal + sliding window) for 32k prefill.
+ops.py       : jit'd public wrappers (padding, batching, backend dispatch).
+ref.py       : pure-jnp oracles every kernel is swept against.
+"""
+
+from repro.kernels import ops, ref
+from repro.kernels.ops import matmul, attention
+
+__all__ = ["ops", "ref", "matmul", "attention"]

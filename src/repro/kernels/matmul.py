@@ -1,0 +1,127 @@
+"""Tiled matmul Pallas kernel — TPU adaptation of the paper's OpenCL kernel.
+
+The 2012 kernel stages 16x16 work-group tiles of A and B through 16 KB of
+local (scratchpad) memory, accumulates in registers, and sweeps tile sizes
+{4x4 ... 16x16}. The TPU translation (DESIGN.md §3):
+
+  * work-group tile        -> BlockSpec tile, MXU-aligned (multiples of 128),
+                              staged HBM->VMEM by the pallas_call pipeline
+  * local-memory staging   -> automatic double-buffered DMA per grid step
+  * register accumulator   -> fp32 VMEM scratch accumulator across the K grid
+  * barriers               -> grid sequencing: K is an "arbitrary"
+                              (sequential) dimension, M/N are "parallel"
+  * float4 vectorization   -> (8,128) lane alignment of the block shapes
+  * tile-size sweep        -> block_m/n/k are runtime-selectable; the sweep
+                              lives in benchmarks/kernel_sweep.py
+
+The kernel computes C[M,N] = A[M,K] @ B[K,N] with fp32 accumulation for
+f32/bf16 inputs. Shapes must be block-divisible — ``ops.matmul`` pads and
+un-pads arbitrary shapes.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:  # TPU compiler params are unavailable when only CPU plugins exist
+    from jax.experimental.pallas import tpu as pltpu
+    _HAVE_PLTPU = True
+except Exception:  # pragma: no cover
+    pltpu = None
+    _HAVE_PLTPU = False
+
+__all__ = ["matmul_kernel", "matmul_pallas", "DEFAULT_BLOCK"]
+
+# Default tile: 512x512 output tile, K panels of 512. VMEM footprint
+# (bf16 in, f32 acc): 2*512*512*2 + 512*512*4 = 2.0 MiB << ~16 MiB VMEM,
+# leaving room for double buffering. All dims multiples of the 128-wide MXU.
+DEFAULT_BLOCK = (512, 512, 512)
+
+
+def matmul_kernel(a_ref, b_ref, o_ref, acc_ref, *, n_k: int, out_dtype):
+    """Grid point (i, j, k): accumulate A[i,k]-tile @ B[k,j]-tile into acc."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # MXU matmul on the VMEM-resident tiles; accumulate at fp32.
+    acc_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == n_k - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(out_dtype)
+
+
+def _accum_dtype(dtype) -> jnp.dtype:
+    d = jnp.dtype(dtype)
+    if d in (jnp.dtype(jnp.bfloat16), jnp.dtype(jnp.float16),
+             jnp.dtype(jnp.float32)):
+        return jnp.dtype(jnp.float32)
+    return d
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_m", "block_n", "block_k", "interpret", "out_dtype"),
+)
+def matmul_pallas(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    block_m: int = DEFAULT_BLOCK[0],
+    block_n: int = DEFAULT_BLOCK[1],
+    block_k: int = DEFAULT_BLOCK[2],
+    interpret: bool = False,
+    out_dtype=None,
+) -> jax.Array:
+    """Block-divisible tiled matmul. See ``ops.matmul`` for arbitrary shapes."""
+    if a.ndim != 2 or b.ndim != 2 or a.shape[1] != b.shape[0]:
+        raise ValueError(f"bad matmul shapes {a.shape} @ {b.shape}")
+    m, k = a.shape
+    _, n = b.shape
+    if m % block_m or n % block_n or k % block_k:
+        raise ValueError(
+            f"shapes ({m},{k})x({k},{n}) not divisible by blocks "
+            f"({block_m},{block_n},{block_k}); use ops.matmul")
+    out_dtype = out_dtype or a.dtype
+    n_k = k // block_k
+
+    grid = (m // block_m, n // block_n, n_k)
+
+    kwargs = {}
+    if _HAVE_PLTPU and not interpret:
+        # M/N tiles are independent; K must run sequentially (accumulator).
+        params_cls = getattr(pltpu, "CompilerParams", None) or getattr(
+            pltpu, "TPUCompilerParams")
+        kwargs["compiler_params"] = params_cls(
+            dimension_semantics=("parallel", "parallel", "arbitrary"))
+
+    return pl.pallas_call(
+        functools.partial(matmul_kernel, n_k=n_k, out_dtype=out_dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[_acc_scratch(block_m, block_n)],
+        interpret=interpret,
+        **kwargs,
+    )(a, b)
+
+
+def _acc_scratch(block_m: int, block_n: int):
+    # fp32 accumulator tile in VMEM (paper: per-work-group register tile).
+    if _HAVE_PLTPU:
+        return pltpu.VMEM((block_m, block_n), jnp.float32)
+    return pl.MemorySpace.ANY  # pragma: no cover — interpret-only fallback

@@ -1,0 +1,114 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+``matmul``   — arbitrary-shape tiled matmul: pads to block multiples, strips
+               the padding, vmaps over leading batch dims, and picks block
+               shapes that fit VMEM. On non-TPU backends it transparently
+               falls back to the XLA dot (the Pallas TPU pipeline only
+               lowers on TPU; ``interpret=True`` forces the kernel body on
+               CPU for validation — used throughout tests/).
+``attention``— flash attention wrapper with the same dispatch contract.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as _ref
+from repro.kernels.matmul import matmul_pallas, DEFAULT_BLOCK
+
+__all__ = ["matmul", "attention", "pick_blocks", "pallas_supported"]
+
+
+def pallas_supported() -> bool:
+    """True when the default backend can lower a TPU Pallas pipeline."""
+    return jax.default_backend() == "tpu"
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def pick_blocks(m: int, n: int, k: int,
+                vmem_budget_bytes: int = 8 * 1024 * 1024):
+    """Choose (block_m, block_n, block_k): largest 128-multiples <= the dim
+    (capped at the defaults) whose working set fits the VMEM budget.
+
+    This is the paper's tile-size selection ("an appropriate TILE size is
+    used based on the problem and local memory available") with 16 KB of
+    OpenCL local memory replaced by the VMEM budget.
+    """
+    bm = min(DEFAULT_BLOCK[0], _round_up(m, 128))
+    bn = min(DEFAULT_BLOCK[1], _round_up(n, 128))
+    bk = min(DEFAULT_BLOCK[2], _round_up(k, 128))
+
+    def footprint(bm, bn, bk):  # bf16 in, f32 acc, x2 double buffering on in
+        return 2 * (bm * bk + bk * bn) * 2 + bm * bn * 4
+
+    # Shrink K first (accumulator unaffected), then N, then M.
+    while footprint(bm, bn, bk) > vmem_budget_bytes and bk > 128:
+        bk //= 2
+    while footprint(bm, bn, bk) > vmem_budget_bytes and bn > 128:
+        bn //= 2
+    while footprint(bm, bn, bk) > vmem_budget_bytes and bm > 128:
+        bm //= 2
+    return bm, bn, bk
+
+
+def matmul(a: jax.Array, b: jax.Array, *, interpret: bool = False,
+           blocks=None, out_dtype=None) -> jax.Array:
+    """C = A @ B via the tiled Pallas kernel; arbitrary shapes and batching.
+
+    a: (..., M, K), b: (..., K, N) (leading dims broadcast like jnp.matmul
+    as long as they match exactly or are absent on one side).
+    """
+    out_dtype = out_dtype or a.dtype
+    if not (interpret or pallas_supported()):
+        # Portable path: identical math (fp32 accumulation) via XLA.
+        return _ref.matmul_ref(a, b, out_dtype=out_dtype)
+
+    # Normalize batching: strip matching leading dims via vmap.
+    if a.ndim > 2 or b.ndim > 2:
+        if a.ndim == b.ndim:
+            return jax.vmap(lambda x, y: matmul(
+                x, y, interpret=interpret, blocks=blocks,
+                out_dtype=out_dtype))(a, b)
+        if a.ndim > 2 and b.ndim == 2:
+            return jax.vmap(lambda x: matmul(
+                x, b, interpret=interpret, blocks=blocks,
+                out_dtype=out_dtype))(a)
+        if b.ndim > 2 and a.ndim == 2:
+            return jax.vmap(lambda y: matmul(
+                a, y, interpret=interpret, blocks=blocks,
+                out_dtype=out_dtype), out_axes=0)(b)
+        raise ValueError(f"unsupported batch ranks {a.shape} @ {b.shape}")
+
+    m, k = a.shape
+    k2, n = b.shape
+    bm, bn, bk = blocks or pick_blocks(m, n, k)
+
+    mp, np_, kp = _round_up(m, bm), _round_up(n, bn), _round_up(k, bk)
+    if (mp, kp) != (m, k):
+        a = jnp.pad(a, ((0, mp - m), (0, kp - k)))
+    if (kp, np_) != (k2, n):
+        b = jnp.pad(b, ((0, kp - k2), (0, np_ - n)))
+
+    out = matmul_pallas(a, b, block_m=bm, block_n=bn, block_k=bk,
+                        interpret=interpret, out_dtype=out_dtype)
+    if (mp, np_) != (m, n):
+        out = out[:m, :n]
+    return out
+
+
+def attention(q, k, v, *, causal: bool = True, window=None, scale=None,
+              interpret: bool = False, block_q: int = 256, block_k: int = 256):
+    """Flash attention (q:(Sq,D), k/v:(Skv,D)) with XLA fallback off-TPU."""
+    if not (interpret or pallas_supported()):
+        return _ref.flash_attention_ref(q, k, v, causal=causal, window=window,
+                                        scale=scale)
+    from repro.kernels.attention import flash_attention
+    return flash_attention(q, k, v, causal=causal, window=window, scale=scale,
+                           interpret=interpret, block_q=block_q,
+                           block_k=block_k)

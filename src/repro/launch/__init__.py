@@ -1,0 +1,1 @@
+"""repro.launch — mesh, dry-run, train and serve drivers."""

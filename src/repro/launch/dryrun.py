@@ -1,0 +1,334 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST precede any other import (jax locks the device
+count at first init). 512 placeholder host devices back the production
+meshes; nothing is allocated — inputs are ShapeDtypeStructs.
+
+Per cell:
+    jit(step, in_shardings, out_shardings, donate).lower(specs).compile()
+    -> memory_analysis()  (fits 16 GB/chip?)
+    -> cost_analysis()    (per-device FLOPs / bytes)
+    -> HLO collective parse -> 3-term roofline (repro.analysis.roofline)
+
+Results are cached as JSON under experiments/dryrun/ so the 80-cell sweep
+is resumable; --skip-existing continues an interrupted sweep.
+
+Usage:
+    python -m repro.launch.dryrun --arch all --shape all --mesh both
+    python -m repro.launch.dryrun --arch qwen3-1.7b --shape train_4k --mesh single
+"""
+
+import argparse
+import dataclasses
+import gc
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.analysis import roofline
+from repro.configs import (ARCH_NAMES, SHAPES, get_config, input_specs,
+                           shape_applicable)
+from repro.launch.mesh import make_production_mesh, dp_axes
+from repro.models import init_params, decode_step
+from repro.models.layers import ShardCtx
+from repro.parallel import sharding
+from repro.serve.engine import prefill, serve_config
+from repro.train.train_step import init_train_state, make_train_step
+
+HBM_PER_CHIP = 16 * 1024**3          # v5e
+
+
+def choose_accum(global_batch: int, dp: int, want: int) -> int:
+    """Largest accum <= want with (batch/accum) divisible by dp."""
+    for a in range(min(want, global_batch), 0, -1):
+        if global_batch % a == 0 and (global_batch // a) % dp == 0:
+            return a
+    return 1
+
+
+def _dp_size(mesh):
+    n = 1
+    for a in dp_axes(mesh):
+        n *= mesh.shape[a]
+    return n
+
+
+def _maybe_dp(mesh, dim: int):
+    """dp axes tuple when the dim divides, else None (replicate)."""
+    return dp_axes(mesh) if dim % _dp_size(mesh) == 0 else None
+
+
+def _input_shardings(mesh, cfg, specs):
+    out = {}
+    for name, sds in specs.items():
+        if name == "cache":
+            out[name] = sharding.cache_partition_specs(sds, cfg, mesh)
+        else:
+            b = sds.shape[0]
+            rest = (None,) * (len(sds.shape) - 1)
+            out[name] = P(_maybe_dp(mesh, b), *rest)
+    return out
+
+
+def build_cell(arch: str, shape_name: str, mesh, *, sp: bool = False,
+               decode_mode: str = "tp", overrides=None,
+               cast_params: str = "step"):
+    """Returns (fn, arg_specs, in_shardings, out_shardings, donate, cfg, shape)."""
+    shape = SHAPES[shape_name]
+    cfg = get_config(arch)
+    if overrides:
+        cfg = cfg.replace(**overrides)
+    sctx = ShardCtx(mesh=mesh, dp=dp_axes(mesh), sp=sp)
+    kind, specs = input_specs(cfg, shape_name)
+    in_batch_specs = _input_shardings(mesh, cfg, specs)
+
+    if kind == "train":
+        accum = choose_accum(shape.global_batch, _dp_size(mesh),
+                             cfg.grad_accum)
+        cfg_t = cfg.replace(grad_accum=accum)
+        params_shape = jax.eval_shape(
+            lambda: init_params(cfg_t, jax.random.PRNGKey(0)))
+        state_shape = jax.eval_shape(
+            lambda: init_train_state(cfg_t, params_shape))
+        state_spec = sharding.state_specs(state_shape, cfg_t, mesh, "train")
+        step = make_train_step(cfg_t, sctx=sctx, accum=accum,
+                               cast_params=cast_params)
+
+        def fn(state, batch):
+            return step(state, batch)
+
+        args = (state_shape, specs)
+        in_sh = (state_spec, in_batch_specs)
+        out_sh = (state_spec, None)
+        donate = (0,)
+        return fn, args, in_sh, out_sh, donate, cfg_t, shape
+
+    cfg_s = serve_config(cfg).replace(param_dtype="bfloat16")
+    if overrides:
+        # re-apply: serve_config resets capacity_factor, and hillclimb
+        # variants need to override the SERVING capacity too
+        cfg_s = cfg_s.replace(**overrides)
+    params_shape = jax.eval_shape(
+        lambda: init_params(cfg_s, jax.random.PRNGKey(0)))
+    mode = "decode" if kind == "decode" else ("decode" if decode_mode == "tp"
+                                              else "train")
+    p_spec = sharding.param_specs(params_shape, cfg_s, mesh, "decode")
+
+    if kind == "prefill":
+        def fn(params, batch):
+            return prefill(cfg_s, params,
+                           batch["tokens"], cache_len=shape.seq_len,
+                           sctx=sctx,
+                           frames=batch.get("frames"),
+                           vision_embeds=batch.get("vision_embeds"))
+
+        cache_shape = jax.eval_shape(
+            lambda p, b: fn(p, b)[1], params_shape, specs)
+        cache_spec = sharding.cache_partition_specs(cache_shape, cfg_s, mesh)
+        args = (params_shape, specs)
+        in_sh = (p_spec, in_batch_specs)
+        out_sh = (P(_maybe_dp(mesh, shape.global_batch), None, None),
+                  cache_spec)
+        return fn, args, in_sh, out_sh, (), cfg_s, shape
+
+    # decode — donate the cache: it is updated in place every step
+    def fn(params, batch):
+        return decode_step(cfg_s, params, batch["tokens"], batch["cache"],
+                           sctx=sctx)
+
+    args = (params_shape, specs)
+    in_sh = (p_spec, in_batch_specs)
+    out_sh = (P(_maybe_dp(mesh, shape.global_batch), None, None),
+              in_batch_specs["cache"])
+    donate = (1,)
+    return fn, args, in_sh, out_sh, donate, cfg_s, shape
+
+
+def _hoisted_upcast_bytes(hlo_text: str) -> int:
+    """Bytes of loop-hoisted f32 copies of bf16 parameters in ENTRY.
+
+    XLA:CPU emulates bf16 dots by upcasting operands to f32; for weights
+    that are loop-invariant the converted copy is hoisted out of the layer
+    scan and lives for the whole step. TPU's MXU consumes bf16 natively, so
+    these buffers do not exist on the target hardware — we report memory
+    both with and without them (EXPERIMENTS.md §Dry-run, caveat C1).
+    """
+    from repro.analysis import hlo_cost as H
+    comps = H._parse_computations(hlo_text)
+    entry = comps.get("__entry__")
+    if entry is None:
+        return 0
+    param_dims = set()
+    for ins in entry.instrs:
+        if ins.op == "parameter":
+            sd = H._shape_dims(ins.type_str)
+            if sd and sd[0] == "bf16":
+                param_dims.add(tuple(sd[1]))
+    hoisted = 0
+    for ins in entry.instrs:
+        if ins.op not in ("convert", "fusion", "copy"):
+            continue
+        sd = H._shape_dims(ins.type_str)
+        if sd and sd[0] == "f32" and tuple(sd[1]) in param_dims:
+            hoisted += H._shape_size_bytes(ins.type_str)
+    return hoisted
+
+
+def run_cell(arch: str, shape_name: str, mesh_name: str, out_dir: Path,
+             *, sp: bool = False, verbose: bool = True,
+             variant: str = "baseline", overrides=None,
+             cast_params: str = "step", fused_attention: bool = False):
+    shape = SHAPES[shape_name]
+    cfg0 = get_config(arch)
+    ok, why = shape_applicable(cfg0, shape)
+    tag = f"{arch}__{shape_name}__{mesh_name}" + (
+        "" if variant == "baseline" else f"__{variant}")
+    path = out_dir / f"{tag}.json"
+    if not ok:
+        rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+               "status": "SKIP", "reason": why}
+        path.write_text(json.dumps(rec, indent=2))
+        if verbose:
+            print(f"[dryrun] {tag}: SKIP ({why.split(';')[0]})")
+        return rec
+
+    mesh = make_production_mesh(multi_pod=(mesh_name == "multi"))
+    t0 = time.time()
+    try:
+        fn, args, in_sh, out_sh, donate, cfg, shape = build_cell(
+            arch, shape_name, mesh, sp=sp, overrides=overrides,
+            cast_params=cast_params)
+        with mesh:
+            jitted = jax.jit(
+                fn,
+                in_shardings=jax.tree.map(
+                    lambda s: NamedSharding(mesh, s), in_sh,
+                    is_leaf=lambda x: isinstance(x, P)),
+                donate_argnums=donate)
+            lowered = jitted.lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+        mem = compiled.memory_analysis()
+        mem_stats = {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+        }
+        # live bytes per device ~ args + temps + (outputs - aliased/donated)
+        live = (mem.argument_size_in_bytes + mem.temp_size_in_bytes
+                + max(0, mem.output_size_in_bytes - mem.alias_size_in_bytes))
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+        hoist = _hoisted_upcast_bytes(hlo)
+        live_tpu = max(0, live - hoist)
+        mem_stats["hoisted_f32_upcast_bytes"] = hoist
+        rep = roofline.analyze(
+            arch=arch, shape_name=shape_name, mesh_name=mesh_name,
+            n_devices=mesh.size, cost=dict(cost), hlo_text=hlo,
+            cfg=cfg, shape=shape, memory_stats=mem_stats,
+            fused_attention=fused_attention)
+        rec = rep.to_dict()
+        rec.update(status="OK", live_bytes_per_device=live,
+                   live_bytes_tpu=live_tpu,
+                   fits_16gb=bool(live_tpu <= HBM_PER_CHIP),
+                   fits_16gb_strict=bool(live <= HBM_PER_CHIP),
+                   lower_s=round(t_lower, 1), compile_s=round(t_compile, 1),
+                   variant=variant)
+        path.write_text(json.dumps(rec, indent=2))
+        if verbose:
+            print(f"[dryrun] {tag}: OK  dom={rec['dominant']:10s} "
+                  f"compute={rec['compute_s']*1e3:8.2f}ms "
+                  f"mem={rec['memory_s']*1e3:8.2f}ms "
+                  f"coll={rec['collective_s']*1e3:8.2f}ms "
+                  f"useful={rec['useful_ratio']:.2f} "
+                  f"live={live_tpu/2**30:.2f}GiB fits={rec['fits_16gb']} "
+                  f"({t_lower:.0f}s lower, {t_compile:.0f}s compile)")
+        del compiled, lowered, jitted
+        gc.collect()
+        return rec
+    except Exception as e:  # record failures — they are bugs to fix
+        rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+               "status": "FAIL", "error": f"{type(e).__name__}: {e}",
+               "traceback": traceback.format_exc()[-4000:]}
+        path.write_text(json.dumps(rec, indent=2))
+        if verbose:
+            print(f"[dryrun] {tag}: FAIL {type(e).__name__}: {str(e)[:200]}")
+        return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi",
+                                                       "both"])
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--sp", action="store_true",
+                    help="sequence-parallel activations")
+    ap.add_argument("--variant", default="baseline",
+                    help="label for hillclimb variants (suffixes the JSON)")
+    ap.add_argument("--override", action="append", default=[],
+                    help="ArchConfig overrides, e.g. remat_policy=dots")
+    ap.add_argument("--cast-params", default="step",
+                    choices=["step", "microbatch"])
+    ap.add_argument("--fused-attention", action="store_true",
+                    help="roofline model with Pallas flash-attention "
+                         "(VMEM-resident scores; kernels/attention.py)")
+    args = ap.parse_args()
+
+    overrides = {}
+    for ov in args.override:
+        k, v = ov.split("=", 1)
+        for cast in (int, float):
+            try:
+                v = cast(v)
+                break
+            except ValueError:
+                continue
+        overrides[k] = v
+
+    archs = list(ARCH_NAMES) if args.arch == "all" else args.arch.split(",")
+    shapes = list(SHAPES) if args.shape == "all" else args.shape.split(",")
+    meshes = (["single", "multi"] if args.mesh == "both" else [args.mesh])
+
+    out_dir = Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    n_ok = n_fail = n_skip = 0
+    for mesh_name in meshes:
+        for arch in archs:
+            for shape_name in shapes:
+                tag = f"{arch}__{shape_name}__{mesh_name}" + (
+                    "" if args.variant == "baseline" else f"__{args.variant}")
+                path = out_dir / f"{tag}.json"
+                if args.skip_existing and path.exists():
+                    prev = json.loads(path.read_text())
+                    if prev.get("status") in ("OK", "SKIP"):
+                        continue
+                rec = run_cell(arch, shape_name, mesh_name, out_dir,
+                               sp=args.sp, variant=args.variant,
+                               overrides=overrides or None,
+                               cast_params=args.cast_params,
+                               fused_attention=args.fused_attention)
+                st = rec.get("status")
+                n_ok += st == "OK"
+                n_fail += st == "FAIL"
+                n_skip += st == "SKIP"
+    print(f"[dryrun] done: {n_ok} OK, {n_skip} SKIP, {n_fail} FAIL")
+    return 0 if n_fail == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,21 @@
+"""Production meshes. A FUNCTION (not module-level state) so importing this
+module never touches jax device state (assignment requirement)."""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "dp_axes"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; 2x16x16 = 512 chips multi-pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def dp_axes(mesh) -> tuple:
+    """Mesh axes that carry the batch dimension."""
+    return ("pod", "data") if "pod" in mesh.shape else ("data",)

@@ -1,0 +1,60 @@
+"""Serving driver: batched generation with the prefill/decode engine.
+
+    python -m repro.launch.serve --arch qwen3-1.7b --smoke \
+        --batch 4 --prompt-len 32 --max-new 32
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models import init_params
+from repro.serve.engine import generate
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--max-new", type=int, default=32)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    params = init_params(cfg, jax.random.PRNGKey(args.seed))
+    key = jax.random.PRNGKey(args.seed + 1)
+    prompts = jax.random.randint(key, (args.batch, args.prompt_len), 0,
+                                 cfg.vocab_size)
+    kw = {}
+    if cfg.family == "audio":
+        kw["frames"] = jax.random.normal(
+            jax.random.fold_in(key, 1),
+            (args.batch, cfg.encoder_seq, cfg.d_model)) * 0.1
+    if cfg.family == "vlm":
+        kw["vision_embeds"] = jax.random.normal(
+            jax.random.fold_in(key, 2),
+            (args.batch, cfg.n_vision_tokens, cfg.d_model)) * 0.1
+
+    t0 = time.time()
+    out = generate(cfg, params, prompts, max_new_tokens=args.max_new,
+                   temperature=args.temperature, key=key, **kw)
+    out = jax.device_get(out)
+    dt = time.time() - t0
+    n_tok = args.batch * args.max_new
+    print(f"[serve] {cfg.name}: generated {n_tok} tokens in {dt:.2f}s "
+          f"({n_tok/dt:.1f} tok/s incl. compile)")
+    for b in range(min(args.batch, 2)):
+        print(f"[serve]   seq{b}: {out[b][:16].tolist()} ...")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,7 @@
+"""repro.models — config-driven LM substrate for the assigned architectures."""
+
+from repro.models.layers import ShardCtx, NO_SHARD
+from repro.models.model import init_params, forward, decode_step, unembed
+
+__all__ = ["ShardCtx", "NO_SHARD", "init_params", "forward", "decode_step",
+           "unembed"]

@@ -1,0 +1,581 @@
+"""Transformer building blocks — pure functions over explicit param pytrees.
+
+Design rules:
+  * everything jit/scan/remat-safe (jnp + lax only, no host control flow on
+    traced values);
+  * memory-efficient attention: online-softmax over KV chunks so 32k prefill
+    never materializes an S x S score matrix (the Pallas flash kernel in
+    repro.kernels is the TPU fast path; this is the portable equivalent the
+    dry-run lowers);
+  * sliding-window attention slices the KV *band* per query chunk —
+    O(S * window) instead of O(S^2) (beyond-paper optimization, see
+    EXPERIMENTS.md §Perf);
+  * sharding annotations go through a ShardCtx so the same code lowers with
+    or without a mesh.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.ad_checkpoint import checkpoint_name
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+
+__all__ = [
+    "ShardCtx", "norm", "rope", "dense",
+    "attention_block", "mlp_block", "moe_block", "init_attention",
+    "init_mlp", "init_moe", "init_norm",
+]
+
+
+# ---------------------------------------------------------------------------
+# Sharding context
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ShardCtx:
+    """Activation-sharding helper; no-op when mesh is None (single device).
+
+    ``dp``     — data-parallel mesh axes for the batch dim (("pod","data")
+                 on the production mesh).
+    ``tp``     — tensor-parallel axis name ("model").
+    ``sp``     — if True, additionally shard the sequence dim of residual
+                 activations over ``tp`` (sequence parallelism).
+    """
+    mesh: Optional[object] = None
+    dp: tuple = ("data",)
+    tp: str = "model"
+    sp: bool = False
+
+    def _ok(self, size: int, axes) -> bool:
+        if self.mesh is None:
+            return False
+        n = 1
+        for a in (axes if isinstance(axes, tuple) else (axes,)):
+            n *= self.mesh.shape[a]
+        return size % n == 0
+
+    def shard(self, x, *axes_per_dim):
+        """with_sharding_constraint; each entry is a mesh-axis (tuple), or None.
+        Axes that don't divide the dim are dropped (replicated) silently —
+        the divisibility rules of DESIGN.md §6 made concrete."""
+        if self.mesh is None:
+            return x
+        spec = []
+        for dim, axes in enumerate(axes_per_dim):
+            if axes is not None and self._ok(x.shape[dim], axes):
+                spec.append(axes)
+            else:
+                spec.append(None)
+        return lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, P(*spec)))
+
+    def activation(self, x):
+        """Residual-stream activations (B, S, D)."""
+        seq_axis = self.tp if self.sp else None
+        return self.shard(x, self.dp, seq_axis, None)
+
+    def heads(self, x):
+        """Per-head activations (B, S, H, Dh): H over tp when divisible."""
+        return self.shard(x, self.dp, None, self.tp, None)
+
+
+NO_SHARD = ShardCtx()
+
+
+# ---------------------------------------------------------------------------
+# Primitives
+# ---------------------------------------------------------------------------
+
+def norm(x, w, *, kind: str = "rmsnorm", eps: float = 1e-5, bias=None):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        y = xf * lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    elif kind == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+        y = (xf - mu) * lax.rsqrt(var + eps)
+    else:
+        raise ValueError(f"unknown norm {kind}")
+    y = y * w.astype(jnp.float32)
+    if bias is not None:
+        y = y + bias.astype(jnp.float32)
+    return y.astype(dt)
+
+
+def rope(x, positions, *, theta: float = 10_000.0):
+    """Rotary embedding. x: (..., S, H, D), positions: (..., S) int32."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(angles)[..., None, :]   # (..., S, 1, half)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def dense(x, w, b=None):
+    """x (..., D_in) @ w (D_in, D_out).
+
+    Output stays in the compute dtype: on TPU the MXU accumulates bf16
+    matmuls in fp32 internally regardless, and forcing an fp32 *output*
+    (preferred_element_type) would make every backward cotangent fp32 —
+    doubling HBM traffic and halving MXU rate for the whole backward pass
+    (measured in EXPERIMENTS.md §Perf, hillclimb H1-2).
+    """
+    y = jnp.einsum("...d,df->...f", x, w.astype(x.dtype))
+    if b is not None:
+        y = y + b.astype(y.dtype)
+    return y
+
+
+def _act(x, kind: str):
+    if kind == "silu":
+        return jax.nn.silu(x)
+    if kind == "gelu":
+        return jax.nn.gelu(x)
+    raise ValueError(f"unknown act {kind}")
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+_NEG = jnp.float32(-1e30)
+
+def _scoped(name):
+    """Tag all ops of a function with a named_scope — the fused-kernel
+    roofline model (analysis.hlo_cost.FUSED_ATTENTION_MARKERS) keys on it."""
+    def wrap(fn):
+        import functools
+
+        @functools.wraps(fn)
+        def inner(*a, **k):
+            with jax.named_scope(name):
+                return fn(*a, **k)
+        return inner
+    return wrap
+
+
+
+
+def _maybe_ckpt_body(body, enable: bool):
+    """Flash-style backward: checkpoint the chunk body so scan-AD recomputes
+    scores instead of stacking them as residuals (ArchConfig.attention_bwd)."""
+    if not enable:
+        return body
+    return jax.checkpoint(body,
+                          policy=jax.checkpoint_policies.nothing_saveable)
+
+
+@_scoped("flash_attention_core")
+def _online_chunk_attention(q, k, v, *, causal: bool, q_offset: int,
+                            q_chunk: int, kv_chunk: int,
+                            bwd_recompute: bool = True):
+    """Memory-efficient attention. q: (B,Sq,Hkv,G,D); k,v: (B,Skv,Hkv,D).
+
+    Scans query chunks (outer) and KV chunks (inner) keeping a running
+    (max, denom, acc) — scores never exceed (B,Hkv,G,q_chunk,kv_chunk).
+    """
+    b, sq, hkv, g, d = q.shape
+    skv = k.shape[1]
+    q_chunk = min(q_chunk, sq)
+    kv_chunk = min(kv_chunk, skv)
+    # Pad ragged sequence lengths up to the chunk size instead of shrinking
+    # the chunk: whisper's 1500-frame encoder would otherwise degrade to
+    # 4-wide chunks (375x375 chunk pairs — measured 17x memory blowup).
+    sq_pad = -sq % q_chunk
+    skv_pad = -skv % kv_chunk
+    sq_t, skv_t = sq + sq_pad, skv + skv_pad
+    if sq_pad:
+        q = jnp.pad(q, ((0, 0), (0, sq_pad), (0, 0), (0, 0), (0, 0)))
+    if skv_pad:
+        k = jnp.pad(k, ((0, 0), (0, skv_pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, skv_pad), (0, 0), (0, 0)))
+    n_q, n_kv = sq_t // q_chunk, skv_t // kv_chunk
+    scale = d ** -0.5
+
+    qc = q.reshape(b, n_q, q_chunk, hkv, g, d).transpose(1, 0, 3, 4, 2, 5)
+    kc = k.reshape(b, n_kv, kv_chunk, hkv, d).transpose(1, 0, 3, 2, 4)
+    vc = kc_v = v.reshape(b, n_kv, kv_chunk, hkv, d).transpose(1, 0, 3, 2, 4)
+
+    def q_step(_, qi_and_chunk):
+        qi, q_blk = qi_and_chunk          # q_blk: (B,Hkv,G,q_chunk,D)
+        q_pos = q_offset + qi * q_chunk + jnp.arange(q_chunk)
+
+        def kv_step(carry, ki_and_blk):
+            m_run, l_run, acc = carry
+            ki, k_blk, v_blk = ki_and_blk  # (B,Hkv,kv_chunk,D)
+            # bf16 inputs, fp32 scores (softmax stability; MXU f32 accum)
+            s = jnp.einsum("bhgqd,bhkd->bhgqk", q_blk * q_blk.dtype.type(scale),
+                           k_blk, preferred_element_type=jnp.float32)
+            k_pos = ki * kv_chunk + jnp.arange(kv_chunk)
+            mask = k_pos[None, :] < skv           # padded keys are invalid
+            if causal:
+                mask &= k_pos[None, :] <= q_pos[:, None]
+            if causal or skv_pad:
+                s = jnp.where(mask, s, _NEG)
+            m_cur = jnp.max(s, axis=-1, keepdims=True)
+            m_new = jnp.maximum(m_run, m_cur)
+            p = jnp.exp(s - m_new)
+            corr = jnp.exp(m_run - m_new)
+            l_new = corr * l_run + jnp.sum(p, axis=-1, keepdims=True)
+            acc_new = acc * corr + jnp.einsum(
+                "bhgqk,bhkd->bhgqd", p.astype(v_blk.dtype), v_blk,
+                preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, hkv, g, q_chunk, 1), _NEG, jnp.float32)
+        l0 = jnp.zeros_like(m0)
+        a0 = jnp.zeros((b, hkv, g, q_chunk, d), jnp.float32)
+        # checkpoint the chunk body: WITHOUT it, scan-AD stacks every
+        # chunk's score/prob tensors as residuals — a full f32 S x S stash
+        # per layer. With it, the backward recomputes each chunk's scores
+        # from (q_blk, k_blk, v_blk): the flash-attention backward,
+        # expressed as remat (EXPERIMENTS.md §Perf H1).
+        (m_f, l_f, acc_f), _ = lax.scan(
+            _maybe_ckpt_body(kv_step, bwd_recompute),
+            (m0, l0, a0),
+            (jnp.arange(n_kv), kc, kc_v))
+        l_safe = jnp.where(l_f == 0.0, 1.0, l_f)
+        return None, (acc_f / l_safe).astype(q.dtype)
+
+    _, out = lax.scan(
+        _maybe_ckpt_body(q_step, bwd_recompute),
+        None, (jnp.arange(n_q), qc))
+    # out: (n_q, B, Hkv, G, q_chunk, D) -> (B, Sq, Hkv, G, D)
+    out = out.transpose(1, 0, 4, 2, 3, 5).reshape(b, sq_t, hkv, g, d)
+    return out[:, :sq] if sq_pad else out
+
+
+@_scoped("flash_attention_core")
+def _banded_window_attention(q, k, v, *, window: int, q_offset: int,
+                             q_chunk: int, bwd_recompute: bool = True):
+    """Sliding-window attention via per-chunk KV band slicing: O(S*window).
+
+    For query chunk starting at absolute position p, only keys in
+    (p - window, p + q_chunk) can be visible; slice that band with a
+    dynamic_slice instead of visiting every KV chunk. Beyond-paper
+    optimization recorded in EXPERIMENTS.md §Perf.
+    """
+    b, sq, hkv, g, d = q.shape
+    skv = k.shape[1]
+    q_chunk = min(q_chunk, sq)
+    while sq % q_chunk:
+        q_chunk //= 2
+    n_q = sq // q_chunk
+    band = min(window + q_chunk, skv)
+    scale = d ** -0.5
+
+    qc = q.reshape(b, n_q, q_chunk, hkv, g, d).transpose(1, 0, 3, 4, 2, 5)
+
+    def q_step(_, qi_and_chunk):
+        qi, q_blk = qi_and_chunk
+        q_start = q_offset + qi * q_chunk            # absolute pos in KV axis
+        start = jnp.clip(q_start - window + 1, 0, skv - band)
+        k_band = lax.dynamic_slice_in_dim(k, start, band, axis=1)
+        v_band = lax.dynamic_slice_in_dim(v, start, band, axis=1)
+        q_pos = q_start + jnp.arange(q_chunk)
+        k_pos = start + jnp.arange(band)
+        mask = (k_pos[None, :] <= q_pos[:, None]) & \
+               (k_pos[None, :] > q_pos[:, None] - window)
+        s = jnp.einsum("bhgqd,bkhd->bhgqk", q_blk * q_blk.dtype.type(scale),
+                       k_band, preferred_element_type=jnp.float32)
+        s = jnp.where(mask[None, None, None], s, _NEG)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhgqk,bkhd->bhgqd", p.astype(v_band.dtype), v_band,
+                       preferred_element_type=jnp.float32)
+        return None, o.astype(q.dtype)
+
+    # checkpoint: see _online_chunk_attention — keeps scan-AD from stacking
+    # per-chunk band scores as residuals.
+    _, out = lax.scan(
+        _maybe_ckpt_body(q_step, bwd_recompute),
+        None, (jnp.arange(n_q), qc))
+    out = out.transpose(1, 0, 4, 2, 3, 5).reshape(b, sq, hkv, g, d)
+    return out
+
+
+@_scoped("flash_attention_core")
+def _decode_attention(q, k_cache, v_cache, n_valid, *, window=None):
+    """Single-step decode. q: (B,1,Hkv,G,D); caches: (B,C,Hkv,D);
+    n_valid: (B,) live slot count (ring buffers are full == C)."""
+    b, _, hkv, g, d = q.shape
+    c = k_cache.shape[1]
+    scale = d ** -0.5
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", q * q.dtype.type(scale),
+                   k_cache.astype(q.dtype),
+                   preferred_element_type=jnp.float32)   # (B,Hkv,G,1,C)
+    slot = jnp.arange(c)
+    mask = slot[None, :] < n_valid[:, None]              # (B,C)
+    s = jnp.where(mask[:, None, None, None, :], s, _NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(v_cache.dtype), v_cache,
+                   preferred_element_type=jnp.float32)
+    return o.astype(q.dtype)
+
+
+def init_norm(key, cfg: ArchConfig, with_bias=False):
+    p = {"w": jnp.ones((cfg.d_model,), jnp.dtype(cfg.param_dtype))}
+    if with_bias or cfg.norm_type == "layernorm":
+        p["b"] = jnp.zeros((cfg.d_model,), jnp.dtype(cfg.param_dtype))
+    return p
+
+
+def _apply_norm(x, p, cfg: ArchConfig):
+    return norm(x, p["w"], kind=cfg.norm_type, eps=cfg.norm_eps,
+                bias=p.get("b"))
+
+
+def init_attention(key, cfg: ArchConfig):
+    pdt = jnp.dtype(cfg.param_dtype)
+    dq = cfg.n_heads * cfg.d_head
+    dkv = cfg.n_kv_heads * cfg.d_head
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    std = cfg.d_model ** -0.5
+    p = {
+        "wq": jax.random.normal(k1, (cfg.d_model, dq), pdt) * std,
+        "wk": jax.random.normal(k2, (cfg.d_model, dkv), pdt) * std,
+        "wv": jax.random.normal(k3, (cfg.d_model, dkv), pdt) * std,
+        "wo": jax.random.normal(k4, (dq, cfg.d_model), pdt) * (dq ** -0.5),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((dq,), pdt)
+        p["bk"] = jnp.zeros((dkv,), pdt)
+        p["bv"] = jnp.zeros((dkv,), pdt)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((cfg.d_head,), pdt)
+        p["k_norm"] = jnp.ones((cfg.d_head,), pdt)
+    return p
+
+
+def write_kv_cache(k_cache, v_cache, k_new, v_new, pos):
+    """Write one token into (B,C,Hkv,Dh) buffers; ring when pos >= C.
+    pos: (B,) tokens already cached. Returns (k, v, n_valid).
+
+    One-hot multiply-add instead of a per-batch scatter: a scatter with a
+    batch-dependent index into a context-sharded cache makes GSPMD fall
+    back to full-cache rematerialization (~100x decode traffic, measured —
+    EXPERIMENTS.md §Perf H3); the select form shards perfectly along every
+    cache dim at the cost of one read+write of the device-local shard.
+    """
+    c = k_cache.shape[1]
+    idx = pos % c
+    onehot = (jnp.arange(c)[None, :] == idx[:, None])        # (B,C)
+    m = onehot[:, :, None, None]
+    k_cache = jnp.where(m, k_new[:, None].astype(k_cache.dtype), k_cache)
+    v_cache = jnp.where(m, v_new[:, None].astype(v_cache.dtype), v_cache)
+    n_valid = jnp.minimum(pos + 1, c)
+    return k_cache, v_cache, n_valid
+
+
+def attention_block(cfg: ArchConfig, p, x, *, sctx: ShardCtx = NO_SHARD,
+                    positions=None, kv_cache=None, cache_write: bool = True,
+                    use_rope: bool = True, causal: Optional[bool] = None,
+                    kv_override=None, q_chunk: int = 512,
+                    kv_chunk: int = 1024):
+    """GQA attention. x: (B,S,D).
+
+    Modes:
+      * prefill/train: kv_cache is None -> returns (out, (k, v)) where k/v
+        are the fresh full-sequence KV (for cache construction).
+      * decode: kv_cache = (k_cache, v_cache, pos) with q of length 1; the
+        block writes the new token's K/V into the (ring) buffers and
+        returns (out, (k_cache', v_cache')).
+      * cross-attention decode: kv_cache = (k, v, n_valid), cache_write=False
+        (static encoder KV — nothing is written).
+      * cross-attention prefill: kv_override = (k, v) precomputed KV.
+    """
+    b, s, _ = x.shape
+    causal = cfg.causal if causal is None else causal
+    h, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    g = h // hkv
+
+    q = checkpoint_name(dense(x, p["wq"], p.get("bq")), "proj_out").reshape(b, s, h, dh)
+    if cfg.qk_norm:
+        q = norm(q, p["q_norm"], kind="rmsnorm", eps=cfg.norm_eps)
+    if use_rope:
+        if positions is None:
+            positions = jnp.arange(s)[None, :].astype(jnp.int32)
+        q = rope(q, positions, theta=cfg.rope_theta)
+    q = sctx.heads(q)
+    qg = q.reshape(b, s, hkv, g, dh)
+
+    need_fresh = kv_override is None and (kv_cache is None or cache_write)
+    k = v = None
+    if kv_override is not None:
+        k, v = kv_override
+    elif need_fresh:
+        k = checkpoint_name(dense(x, p["wk"], p.get("bk")), "proj_out").reshape(b, s, hkv, dh)
+        v = checkpoint_name(dense(x, p["wv"], p.get("bv")), "proj_out").reshape(b, s, hkv, dh)
+        if cfg.qk_norm:
+            k = norm(k, p["k_norm"], kind="rmsnorm", eps=cfg.norm_eps)
+        if use_rope:
+            k = rope(k, positions, theta=cfg.rope_theta)
+        k = sctx.heads(k)
+        v = sctx.heads(v)
+
+    if kv_cache is not None:
+        k_cache, v_cache, meta = kv_cache
+        if cache_write:
+            k_cache, v_cache, n_valid = write_kv_cache(
+                k_cache, v_cache, k[:, 0], v[:, 0], meta)
+        else:
+            n_valid = meta
+        out = _decode_attention(qg, k_cache, v_cache, n_valid)
+        aux_kv = (k_cache, v_cache)
+    else:
+        q_off = k.shape[1] - s
+        if cfg.sliding_window is not None and causal and \
+                k.shape[1] > cfg.sliding_window:
+            out = _banded_window_attention(
+                qg, k, v, window=cfg.sliding_window, q_offset=q_off,
+                q_chunk=q_chunk,
+                bwd_recompute=(cfg.attention_bwd == "recompute"))
+        else:
+            out = _online_chunk_attention(
+                qg, k, v, causal=causal, q_offset=q_off,
+                q_chunk=q_chunk, kv_chunk=kv_chunk,
+                bwd_recompute=(cfg.attention_bwd == "recompute"))
+        aux_kv = (k, v)
+
+    out = out.reshape(b, s, h * dh)
+    out = checkpoint_name(dense(out, p["wo"]), "block_out")
+    return sctx.activation(out), aux_kv
+
+
+# ---------------------------------------------------------------------------
+# MLP / MoE
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, cfg: ArchConfig):
+    pdt = jnp.dtype(cfg.param_dtype)
+    k1, k2, k3 = jax.random.split(key, 3)
+    std_in, std_out = cfg.d_model ** -0.5, cfg.d_ff ** -0.5
+    p = {
+        "w_up": jax.random.normal(k2, (cfg.d_model, cfg.d_ff), pdt) * std_in,
+        "w_down": jax.random.normal(k3, (cfg.d_ff, cfg.d_model), pdt) * std_out,
+    }
+    if cfg.mlp_type == "swiglu":
+        p["w_gate"] = jax.random.normal(
+            k1, (cfg.d_model, cfg.d_ff), pdt) * std_in
+    return p
+
+
+def mlp_block(cfg: ArchConfig, p, x, *, sctx: ShardCtx = NO_SHARD):
+    """SwiGLU or plain MLP (up/gate sharded over tp on d_ff)."""
+    up = checkpoint_name(dense(x, p["w_up"]), "proj_out")
+    up = sctx.shard(up, sctx.dp, None, sctx.tp)
+    if cfg.mlp_type == "swiglu":
+        gate = checkpoint_name(dense(x, p["w_gate"]), "proj_out")
+        gate = sctx.shard(gate, sctx.dp, None, sctx.tp)
+        h = _act(gate, cfg.act) * up
+    else:
+        h = _act(up, cfg.act)
+    y = checkpoint_name(dense(h, p["w_down"]), "block_out")
+    return sctx.activation(y)
+
+
+def init_moe(key, cfg: ArchConfig):
+    pdt = jnp.dtype(cfg.param_dtype)
+    k0, k1, k2, k3 = jax.random.split(key, 4)
+    e, d, f = cfg.n_experts, cfg.d_model, cfg.d_ff
+    std_in, std_out = d ** -0.5, f ** -0.5
+    return {
+        "router": jax.random.normal(k0, (d, e), pdt) * std_in,
+        "w_gate": jax.random.normal(k1, (e, d, f), pdt) * std_in,
+        "w_up": jax.random.normal(k2, (e, d, f), pdt) * std_in,
+        "w_down": jax.random.normal(k3, (e, f, d), pdt) * std_out,
+    }
+
+
+def _moe_dispatch_one(cfg: ArchConfig, p, x, cap: int):
+    """Sort-based top-k dispatch for ONE sequence. x: (S, D).
+
+    Per-sequence dispatch keeps the sort/scatter device-local when the batch
+    dim is data-sharded (no global distributed sort), at the cost of
+    enforcing expert capacity per sequence instead of per global batch —
+    standard GShard 'group' semantics.
+    """
+    s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+
+    logits = dense(x, p["router"]).astype(jnp.float32)       # (S,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = lax.top_k(probs, k)                # (S,k)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    flat_expert = gate_idx.reshape(-1)                        # (S*k,)
+    flat_gate = gate_vals.reshape(-1)
+    flat_token = jnp.repeat(jnp.arange(s), k)                 # token per slot
+
+    order = jnp.argsort(flat_expert, stable=True)
+    sorted_expert = flat_expert[order]
+    sorted_token = flat_token[order]
+    sorted_gate = flat_gate[order]
+
+    seg_start = jnp.searchsorted(sorted_expert, jnp.arange(e), side="left")
+    pos_in_expert = jnp.arange(s * k) - seg_start[sorted_expert]
+    keep = pos_in_expert < cap
+    dest = jnp.where(keep, sorted_expert * cap + pos_in_expert, e * cap)
+
+    buf = jnp.zeros((e * cap + 1, d), x.dtype).at[dest].set(
+        x[sorted_token], mode="drop")
+    buf = buf[:-1].reshape(e, cap, d)
+
+    def combine(y_buf):
+        y_slots = y_buf.reshape(e * cap, d)
+        gathered = jnp.where(keep[:, None],
+                             y_slots[jnp.clip(dest, 0, e * cap - 1)], 0.0)
+        return jnp.zeros((s, d), x.dtype).at[sorted_token].add(
+            gathered * sorted_gate[:, None].astype(x.dtype))
+
+    return buf, combine, probs
+
+
+def moe_block(cfg: ArchConfig, p, x, *, sctx: ShardCtx = NO_SHARD,
+              capacity_factor: Optional[float] = None):
+    """Top-k MoE: per-sequence sort-based dispatch + batched expert GEMMs.
+
+    Dispatch/combine are vmapped over the batch dim (stays local under data
+    sharding); the expert GEMMs contract over (batch x capacity) so the
+    expert weights see one big MXU-friendly matmul per expert. Tokens beyond
+    per-sequence capacity are dropped (GShard semantics). Returns
+    (y, router_probs) — probs (B,S,E) feed the load-balance aux loss.
+    """
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    cf = capacity_factor if capacity_factor is not None else cfg.capacity_factor
+    cap = int(max(1, round(s * k / e * cf)))
+
+    dispatch = jax.vmap(lambda xx: _moe_dispatch_one(cfg, p, xx, cap)[0])
+    buf = dispatch(x)                                     # (B,E,cap,D)
+    buf = sctx.shard(buf, sctx.dp, None, None, None)
+
+    h_gate = jnp.einsum("becd,edf->becf", buf, p["w_gate"].astype(x.dtype))
+    h_up = jnp.einsum("becd,edf->becf", buf, p["w_up"].astype(x.dtype))
+    h_gate = sctx.shard(h_gate, sctx.dp, None, None, sctx.tp)
+    h_up = sctx.shard(h_up, sctx.dp, None, None, sctx.tp)
+    h = _act(h_gate, cfg.act) * h_up
+    y_buf = jnp.einsum("becf,efd->becd", h, p["w_down"].astype(x.dtype))
+    y_buf = sctx.shard(y_buf, sctx.dp, None, None, None)
+
+    # Re-run the (cheap) routing math under vmap to rebuild combine indices —
+    # keeps dispatch/combine in one vmapped closure without threading index
+    # pytrees through the expert GEMMs.
+    def _combine_one(xx, yy_buf):
+        _, combine, probs_one = _moe_dispatch_one(cfg, p, xx, cap)
+        return combine(yy_buf), probs_one
+
+    y, probs = jax.vmap(_combine_one)(x, y_buf)
+    return sctx.activation(y), probs

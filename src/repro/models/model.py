@@ -1,0 +1,491 @@
+"""Config-driven model builder: decoder-only, MoE, SSM, hybrid, enc-dec.
+
+One ``init_params`` / ``forward`` / ``decode_step`` triple covers all 10
+assigned architectures. Layers are stacked on a leading axis and executed
+with ``lax.scan`` (+ optional remat) so the HLO is O(1) in depth — required
+for the 88-layer granite dry-run cells to compile quickly.
+
+``forward`` returns pre-logits activations; the loss/serving code unembeds
+in chunks (never materializing a (B, S, V) logits tensor for 150k vocabs).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models import ssm as S
+from repro.models.layers import ShardCtx, NO_SHARD
+
+__all__ = ["init_params", "forward", "decode_step", "unembed",
+           "sinusoidal_positions"]
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def _stack(trees):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def _init_attn_layer(key, cfg: ArchConfig, cross: bool = False):
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    p = {
+        "ln1": L.init_norm(k1, cfg),
+        "attn": L.init_attention(k2, cfg),
+        "ln2": L.init_norm(k3, cfg),
+    }
+    if cfg.n_experts:
+        p["moe"] = L.init_moe(k4, cfg)
+    elif cfg.d_ff:
+        p["mlp"] = L.init_mlp(k4, cfg)
+    if cross:
+        p["ln_cross"] = L.init_norm(k5, cfg)
+        p["cross"] = L.init_attention(jax.random.fold_in(k5, 1), cfg)
+    return p
+
+
+def _init_ssm_layer(key, cfg: ArchConfig):
+    k1, k2 = jax.random.split(key)
+    return {"ln1": L.init_norm(k1, cfg), "ssm": S.init_ssm(k2, cfg)}
+
+
+def init_params(cfg: ArchConfig, key):
+    pdt = jnp.dtype(cfg.param_dtype)
+    keys = jax.random.split(key, 8)
+    params = {
+        "embed": jax.random.normal(keys[0], (cfg.vocab_size, cfg.d_model),
+                                   pdt) * 0.02,
+        "final_norm": L.init_norm(keys[1], cfg),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = jax.random.normal(
+            keys[2], (cfg.vocab_size, cfg.d_model), pdt) * 0.02
+
+    lkeys = jax.random.split(keys[3], max(cfg.n_layers, 1))
+    if cfg.layer_pattern:                           # zamba2 hybrid
+        n_m_per = sum(k == "m" for k in cfg.layer_pattern)
+        reps = cfg.n_pattern_repeats
+        m_layers = [_init_ssm_layer(lkeys[i], cfg)
+                    for i in range(reps * n_m_per)]
+        stacked = _stack(m_layers)
+        params["m_blocks"] = jax.tree.map(
+            lambda x: x.reshape((reps, n_m_per) + x.shape[1:]), stacked)
+        params["shared_attn"] = _init_attn_layer(keys[4], cfg)
+        if cfg.n_tail_layers:
+            params["tail_blocks"] = _stack(
+                [_init_ssm_layer(jax.random.fold_in(keys[5], i), cfg)
+                 for i in range(cfg.n_tail_layers)])
+    elif cfg.family == "ssm":
+        params["blocks"] = _stack(
+            [_init_ssm_layer(lkeys[i], cfg) for i in range(cfg.n_layers)])
+    else:
+        cross = cfg.cross_attention
+        params["blocks"] = _stack(
+            [_init_attn_layer(lkeys[i], cfg, cross=cross)
+             for i in range(cfg.n_layers)])
+
+    if cfg.encoder_layers:
+        ekeys = jax.random.split(keys[6], cfg.encoder_layers)
+        params["enc_blocks"] = _stack(
+            [_init_attn_layer(ekeys[i], cfg) for i in range(cfg.encoder_layers)])
+        params["enc_norm"] = L.init_norm(keys[7], cfg)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Shared pieces
+# ---------------------------------------------------------------------------
+
+def sinusoidal_positions(seq: int, d: int, dtype=jnp.float32):
+    pos = jnp.arange(seq, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+    angle = pos / (10_000.0 ** (2 * dim / d))
+    return jnp.concatenate([jnp.sin(angle), jnp.cos(angle)],
+                           axis=-1).astype(dtype)
+
+
+def _maybe_remat(fn, cfg: ArchConfig):
+    """Remat policy for the layer scan (hillclimb H1 lever):
+      "nothing" — recompute the whole layer in backward (min memory);
+      "dots"    — save every matmul output. REFUTED for this codebase: with
+                  chunked attention it stashes the score matrices
+                  (EXPERIMENTS.md §Perf H1c);
+      "proj"    — save only the named projection/block outputs (qkv, wo,
+                  mlp) via checkpoint_name: dots outside the attention
+                  inner loops skip recompute, scores stay rematerialized."""
+    if not cfg.remat:
+        return fn
+    if cfg.remat_policy == "dots":
+        policy = jax.checkpoint_policies.checkpoint_dots
+    elif cfg.remat_policy == "proj":
+        policy = jax.checkpoint_policies.save_only_these_names(
+            "proj_out", "block_out")
+    else:
+        policy = jax.checkpoint_policies.nothing_saveable
+    return jax.checkpoint(fn, policy=policy)
+
+
+def _ffn(cfg, p, x, sctx):
+    """MLP or MoE sublayer; returns (y, aux_loss_scalar)."""
+    if cfg.n_experts:
+        y, probs = L.moe_block(cfg, p["moe"], x, sctx=sctx)
+        # Switch-style load-balance aux: E * sum_e f_e * P_e
+        e = cfg.n_experts
+        top1 = jnp.argmax(probs, axis=-1)
+        f = jnp.mean(jax.nn.one_hot(top1, e, dtype=jnp.float32), axis=(0, 1))
+        pbar = jnp.mean(probs, axis=(0, 1))
+        aux = e * jnp.sum(f * pbar)
+        return y, aux
+    if cfg.d_ff:
+        return L.mlp_block(cfg, p["mlp"], x, sctx=sctx), jnp.float32(0.0)
+    return jnp.zeros_like(x), jnp.float32(0.0)
+
+
+def _attn_layer_apply(cfg, p, x, *, sctx, positions, causal=None,
+                      kv_cache=None, cross_kv=None):
+    """Pre-LN attention (+optional cross-attn) + FFN. Returns
+    (x, fresh_kv, fresh_cross_kv, aux)."""
+    h, fresh_kv = L.attention_block(
+        cfg, p["attn"], L._apply_norm(x, p["ln1"], cfg), sctx=sctx,
+        positions=positions, kv_cache=kv_cache, use_rope=cfg.use_rope,
+        causal=causal)
+    x = x + h
+    if cross_kv is not None:
+        hc, _ = L.attention_block(
+            cfg, p["cross"], L._apply_norm(x, p["ln_cross"], cfg), sctx=sctx,
+            positions=None, use_rope=False, causal=False, kv_override=cross_kv)
+        x = x + hc
+    y, aux = _ffn(cfg, p, L._apply_norm(x, p["ln2"], cfg), sctx)
+    return x + y, fresh_kv, aux
+
+
+def _ssm_layer_apply(cfg, p, x, *, sctx, initial_state=None, conv_state=None,
+                     want_state=False):
+    h = S.ssm_block(cfg, p["ssm"], L._apply_norm(x, p["ln1"], cfg), sctx=sctx,
+                    initial_state=initial_state, conv_state=conv_state,
+                    return_state=want_state)
+    if want_state:
+        h, (st, cv) = h
+        return x + h, st, cv
+    return x + h
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _embed_inputs(cfg, params, tokens, *, frames=None, vision_embeds=None,
+                  sctx=NO_SHARD):
+    cdt = jnp.dtype(cfg.compute_dtype)
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cdt)
+    if cfg.family == "vlm" and vision_embeds is not None:
+        x = jnp.concatenate([vision_embeds.astype(cdt), x], axis=1)
+    if cfg.family == "audio":
+        # decoder positions are sinusoidal (whisper-style)
+        x = x + sinusoidal_positions(x.shape[1], cfg.d_model, cdt)[None]
+    return sctx.activation(x)
+
+
+def _encode(cfg, params, frames, sctx):
+    cdt = jnp.dtype(cfg.compute_dtype)
+    x = frames.astype(cdt) + sinusoidal_positions(
+        frames.shape[1], cfg.d_model, cdt)[None]
+    x = sctx.activation(x)
+
+    def body(carry, blk):
+        y, _, _ = _attn_layer_apply(cfg, blk, carry, sctx=sctx,
+                                    positions=None, causal=False)
+        return y, None
+
+    x, _ = lax.scan(_maybe_remat(body, cfg), x, params["enc_blocks"])
+    return L._apply_norm(x, params["enc_norm"], cfg)
+
+
+def _cast_params(cfg: ArchConfig, params):
+    """Cast fp32 master weights to the compute dtype (mixed precision)."""
+    cdt = jnp.dtype(cfg.compute_dtype)
+    if cdt == jnp.dtype(cfg.param_dtype):
+        return params
+    return jax.tree.map(
+        lambda p: p.astype(cdt) if p.dtype == jnp.dtype(cfg.param_dtype)
+        else p, params)
+
+
+def forward(cfg: ArchConfig, params, tokens, *, sctx: ShardCtx = NO_SHARD,
+            frames=None, vision_embeds=None, return_cache: bool = False,
+            cache_len: Optional[int] = None):
+    """Full-sequence forward. Returns dict with:
+       x        — final pre-logits activations (B, S_total, D)
+       aux      — MoE load-balance loss (scalar)
+       cache    — decode cache pytree (when return_cache)
+    """
+    params = _cast_params(cfg, params)
+    x = _embed_inputs(cfg, params, tokens, frames=frames,
+                      vision_embeds=vision_embeds, sctx=sctx)
+    b, s_total, _ = x.shape
+    positions = jnp.arange(s_total, dtype=jnp.int32)[None, :]
+    enc_out = None
+    if cfg.encoder_layers:
+        enc_out = _encode(cfg, params, frames, sctx)
+
+    want_cache = return_cache
+    win = cfg.sliding_window
+    klen = s_total if win is None else min(win, s_total)
+
+    def _kv_for_cache(k, v):
+        # keep the last `klen` positions (ring layout: oldest-first is fine,
+        # decode masks by count; RoPE already applied)
+        return k[:, -klen:], v[:, -klen:]
+
+    aux_total = jnp.float32(0.0)
+    cache = {}
+
+    if cfg.layer_pattern:                                   # ---- zamba2
+        n_m_per = sum(k == "m" for k in cfg.layer_pattern)
+        shared = params["shared_attn"]
+
+        def super_body(carry, blk):
+            x = carry
+
+            def m_body(xc, mblk):
+                if want_cache:
+                    y, st, cv = _ssm_layer_apply(cfg, mblk, xc, sctx=sctx,
+                                                 want_state=True)
+                    return y, (st, cv)
+                return _ssm_layer_apply(cfg, mblk, xc, sctx=sctx), None
+
+            x, m_states = lax.scan(_maybe_remat(m_body, cfg), x, blk)
+            x, fresh_kv, aux = _attn_layer_apply(cfg, shared, x, sctx=sctx,
+                                                 positions=positions)
+            ys = (m_states, _kv_for_cache(*fresh_kv) if want_cache else None)
+            return x, ys
+
+        x, (m_states, kvs) = lax.scan(super_body, x, params["m_blocks"])
+        if want_cache:
+            states, convs = m_states
+            # states: (reps, n_m_per, B, H, P, N) -> (reps*n_m_per, ...)
+            states = states.reshape((-1,) + states.shape[2:])
+            convs = convs.reshape((-1,) + convs.shape[2:])
+            ks, vs = kvs
+            cache["k"], cache["v"] = ks, vs                  # (reps, B, klen, ...)
+        if cfg.n_tail_layers:
+            def tail_body(xc, mblk):
+                if want_cache:
+                    y, st, cv = _ssm_layer_apply(cfg, mblk, xc, sctx=sctx,
+                                                 want_state=True)
+                    return y, (st, cv)
+                return _ssm_layer_apply(cfg, mblk, xc, sctx=sctx), None
+            x, tail_states = lax.scan(_maybe_remat(tail_body, cfg), x,
+                                      params["tail_blocks"])
+            if want_cache:
+                tst, tcv = tail_states
+                states = jnp.concatenate([states, tst], axis=0)
+                convs = jnp.concatenate([convs, tcv], axis=0)
+        if want_cache:
+            cache["ssm_state"], cache["conv_state"] = states, convs
+
+    elif cfg.family == "ssm":                               # ---- mamba2
+        def body(carry, blk):
+            if want_cache:
+                y, st, cv = _ssm_layer_apply(cfg, blk, carry, sctx=sctx,
+                                             want_state=True)
+                return y, (st, cv)
+            return _ssm_layer_apply(cfg, blk, carry, sctx=sctx), None
+
+        x, states = lax.scan(_maybe_remat(body, cfg), x, params["blocks"])
+        if want_cache:
+            cache["ssm_state"], cache["conv_state"] = states
+
+    else:                                                   # ---- attention
+        cross_kv = None
+
+        def body(carry, blk):
+            x, aux_acc = carry
+            ckv = None
+            if enc_out is not None:
+                # per-layer cross KV computed from encoder output
+                ck = L.dense(enc_out, blk["cross"]["wk"]).reshape(
+                    b, enc_out.shape[1], cfg.n_kv_heads, cfg.d_head)
+                cv = L.dense(enc_out, blk["cross"]["wv"]).reshape(
+                    b, enc_out.shape[1], cfg.n_kv_heads, cfg.d_head)
+                ckv = (ck, cv)
+            y, fresh_kv, aux = _attn_layer_apply(
+                cfg, blk, x, sctx=sctx, positions=positions, cross_kv=ckv)
+            ys = {}
+            if want_cache:
+                ys["kv"] = _kv_for_cache(*fresh_kv)
+                if ckv is not None:
+                    ys["cross_kv"] = ckv
+            return (y, aux_acc + aux), ys
+
+        (x, aux_total), ys = lax.scan(_maybe_remat(body, cfg),
+                                      (x, aux_total), params["blocks"])
+        if want_cache:
+            cache["k"], cache["v"] = ys["kv"]
+            if "cross_kv" in ys:
+                cache["enc_k"], cache["enc_v"] = ys["cross_kv"]
+
+    x = L._apply_norm(x, params["final_norm"], cfg)
+    out = {"x": x, "aux": aux_total / max(cfg.n_layers, 1)}
+    if want_cache:
+        npos = jnp.full((b,), s_total, jnp.int32)
+        cache["pos"] = npos
+        out["cache"] = _pad_cache(cfg, cache, cache_len)
+    return out
+
+
+def _pad_cache(cfg, cache, cache_len):
+    """Grow KV buffers to cache_len slots for subsequent decoding."""
+    if cache_len is None:
+        return cache
+    win = cfg.sliding_window
+    eff = cache_len if win is None else min(cache_len, win)
+    for key in ("k", "v"):
+        if key in cache:
+            cur = cache[key]
+            s = cur.shape[2]
+            if s < eff:
+                pad = jnp.zeros(cur.shape[:2] + (eff - s,) + cur.shape[3:],
+                                cur.dtype)
+                cache[key] = jnp.concatenate([cur, pad], axis=2)
+            elif s > eff:
+                cache[key] = cur[:, :, -eff:]
+    return cache
+
+
+def unembed(cfg: ArchConfig, params, x):
+    """(..., D) -> (..., V) logits at fp32."""
+    w = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    return jnp.einsum("...d,vd->...v", x.astype(jnp.float32),
+                      w.astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+def decode_step(cfg: ArchConfig, params, tokens, cache, *,
+                sctx: ShardCtx = NO_SHARD):
+    """One-token decode. tokens: (B,1). Returns (logits (B,1,V), new_cache)."""
+    params = _cast_params(cfg, params)
+    b = tokens.shape[0]
+    pos = cache["pos"]                                  # (B,) tokens so far
+    cdt = jnp.dtype(cfg.compute_dtype)
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cdt)
+    if cfg.family == "audio":
+        x = x + _sinusoid_at(pos, cfg.d_model, cdt)[:, None, :]
+    x = sctx.activation(x)
+    positions = pos[:, None]
+    new_cache = dict(cache)
+
+    if cfg.layer_pattern:                               # ---- zamba2
+        n_m_per = sum(k == "m" for k in cfg.layer_pattern)
+        reps = cfg.n_pattern_repeats
+        shared = params["shared_attn"]
+        st = cache["ssm_state"]
+        cv = cache["conv_state"]
+        st_main = st[:reps * n_m_per].reshape((reps, n_m_per) + st.shape[1:])
+        cv_main = cv[:reps * n_m_per].reshape((reps, n_m_per) + cv.shape[1:])
+
+        def super_body(x, blk_and_cache):
+            blk, st_r, cv_r, k_r, v_r = blk_and_cache
+
+            def m_body(xc, sc):
+                mblk, st_l, cv_l = sc
+                y, nst, ncv = S.ssm_decode_step(cfg, mblk["ssm"],
+                                                L._apply_norm(xc, mblk["ln1"], cfg),
+                                                st_l, cv_l, sctx=sctx)
+                return xc + y, (nst, ncv)
+
+            x, m_states = lax.scan(m_body, x, (blk, st_r, cv_r))
+            h, (k_r, v_r) = L.attention_block(
+                cfg, shared["attn"], L._apply_norm(x, shared["ln1"], cfg),
+                sctx=sctx, positions=positions, use_rope=cfg.use_rope,
+                kv_cache=(k_r, v_r, pos))
+            x = x + h
+            y, _ = _ffn(cfg, shared, L._apply_norm(x, shared["ln2"], cfg), sctx)
+            return x + y, (m_states, k_r, v_r)
+
+        x, (m_states, ks, vs) = lax.scan(
+            super_body, x,
+            (params["m_blocks"], st_main, cv_main, cache["k"], cache["v"]))
+        nst, ncv = m_states
+        nst = nst.reshape((-1,) + nst.shape[2:])
+        ncv = ncv.reshape((-1,) + ncv.shape[2:])
+        if cfg.n_tail_layers:
+            def tail_body(xc, sc):
+                mblk, st_l, cv_l = sc
+                y, s2, c2 = S.ssm_decode_step(cfg, mblk["ssm"],
+                                              L._apply_norm(xc, mblk["ln1"], cfg),
+                                              st_l, cv_l, sctx=sctx)
+                return xc + y, (s2, c2)
+            x, (tst, tcv) = lax.scan(
+                tail_body, x,
+                (params["tail_blocks"], st[reps * n_m_per:],
+                 cv[reps * n_m_per:]))
+            nst = jnp.concatenate([nst, tst], axis=0)
+            ncv = jnp.concatenate([ncv, tcv], axis=0)
+        new_cache.update(ssm_state=nst, conv_state=ncv, k=ks, v=vs)
+
+    elif cfg.family == "ssm":                           # ---- mamba2
+        def body(xc, sc):
+            blk, st_l, cv_l = sc
+            y, nst, ncv = S.ssm_decode_step(cfg, blk["ssm"],
+                                            L._apply_norm(xc, blk["ln1"], cfg),
+                                            st_l, cv_l, sctx=sctx)
+            return xc + y, (nst, ncv)
+
+        x, (nst, ncv) = lax.scan(body, x, (params["blocks"],
+                                           cache["ssm_state"],
+                                           cache["conv_state"]))
+        new_cache.update(ssm_state=nst, conv_state=ncv)
+
+    else:                                               # ---- attention
+        has_cross = "enc_k" in cache
+
+        def body(xc, sc):
+            if has_cross:
+                blk, k_l, v_l, ek_l, ev_l = sc
+            else:
+                blk, k_l, v_l = sc
+            h, (k_l, v_l) = L.attention_block(
+                cfg, blk["attn"], L._apply_norm(xc, blk["ln1"], cfg),
+                sctx=sctx, positions=positions, use_rope=cfg.use_rope,
+                kv_cache=(k_l, v_l, pos))
+            xc = xc + h
+            if has_cross:
+                n_enc = jnp.full((b,), ek_l.shape[1], jnp.int32)
+                hc, _ = L.attention_block(
+                    cfg, blk["cross"], L._apply_norm(xc, blk["ln_cross"], cfg),
+                    sctx=sctx, positions=None, use_rope=False,
+                    kv_cache=(ek_l, ev_l, n_enc), cache_write=False)
+                xc = xc + hc
+            y, _ = _ffn(cfg, blk, L._apply_norm(xc, blk["ln2"], cfg), sctx)
+            ys = (k_l, v_l)
+            return xc + y, ys
+
+        xs = (params["blocks"], cache["k"], cache["v"])
+        if has_cross:
+            xs = xs + (cache["enc_k"], cache["enc_v"])
+        x, (ks, vs) = lax.scan(body, x, xs)
+        new_cache.update(k=ks, v=vs)
+
+    new_cache["pos"] = pos + 1
+    x = L._apply_norm(x, params["final_norm"], cfg)
+    logits = unembed(cfg, params, x)
+    return logits, new_cache
+
+
+def _sinusoid_at(pos, d, dtype):
+    dim = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+    angle = pos[:, None].astype(jnp.float32) / (10_000.0 ** (2 * dim / d))
+    return jnp.concatenate([jnp.sin(angle), jnp.cos(angle)],
+                           axis=-1).astype(dtype)

@@ -1,0 +1,235 @@
+"""Mamba-2 (SSD — state-space duality) block, chunked, with O(1) decode.
+
+This is where the paper's technique lives inside the assigned SSM archs
+(`mamba2-130m`, `zamba2-1.2b`): the inter-chunk state recurrence
+
+    h_c = exp(sum_t log a_t) * h_{c-1} + S_c
+
+is a chain of associative operator compositions; we evaluate its cumulative
+terms with the log-depth doubling scan (``repro.core.scan.prefix_scan``) —
+exponentiation-by-squaring generalized from one matrix power to a running
+product of transition operators (DESIGN.md §4).
+
+Within a chunk the SSD quadratic form is three dense matmuls — the paper's
+op again, MXU-shaped.
+
+Shapes follow the Mamba-2 reference: d_inner = expand*d_model, H heads of
+size P = ssm_head_dim, G state groups, N = ssm_state.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ArchConfig
+from repro.core.scan import prefix_scan
+from repro.models.layers import ShardCtx, NO_SHARD, dense, norm
+
+__all__ = ["init_ssm", "ssm_block", "ssm_decode_step"]
+
+
+def init_ssm(key, cfg: ArchConfig):
+    pdt = jnp.dtype(cfg.param_dtype)
+    d, di = cfg.d_model, cfg.d_inner
+    g, n, h = cfg.ssm_n_groups, cfg.ssm_state, cfg.ssm_n_heads
+    conv_dim = di + 2 * g * n
+    ks = jax.random.split(key, 4)
+    std = d ** -0.5
+    return {
+        # fused in_proj -> [z(di), x(di), B(g*n), C(g*n), dt(h)]
+        "w_in": jax.random.normal(ks[0], (d, 2 * di + 2 * g * n + h), pdt) * std,
+        "conv_w": jax.random.normal(ks[1], (cfg.ssm_conv_width, conv_dim), pdt)
+        * (cfg.ssm_conv_width ** -0.5),
+        "conv_b": jnp.zeros((conv_dim,), pdt),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, h, dtype=jnp.float32)).astype(pdt),
+        "D": jnp.ones((h,), pdt),
+        "dt_bias": jnp.zeros((h,), pdt) + jnp.log(jnp.expm1(0.01)).astype(pdt),
+        "norm_w": jnp.ones((di,), pdt),
+        "w_out": jax.random.normal(ks[3], (di, d), pdt) * (di ** -0.5),
+    }
+
+
+def _split_proj(cfg: ArchConfig, zxbcdt):
+    di, g, n, h = cfg.d_inner, cfg.ssm_n_groups, cfg.ssm_state, cfg.ssm_n_heads
+    z = zxbcdt[..., :di]
+    x = zxbcdt[..., di:2 * di]
+    b = zxbcdt[..., 2 * di:2 * di + g * n]
+    c = zxbcdt[..., 2 * di + g * n:2 * di + 2 * g * n]
+    dt = zxbcdt[..., 2 * di + 2 * g * n:]
+    return z, x, b, c, dt
+
+
+def _causal_conv(u, w, bias, state=None):
+    """Depthwise causal conv. u: (B,S,C), w: (W,C). state: (B,W-1,C) or None.
+    Returns (y, new_state)."""
+    width = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((u.shape[0], width - 1, u.shape[2]), u.dtype)
+    else:
+        pad = state.astype(u.dtype)
+    full = jnp.concatenate([pad, u], axis=1)         # (B, S+W-1, C)
+    y = jnp.zeros_like(u)
+    for i in range(width):
+        y = y + full[:, i:i + u.shape[1]] * w[i]
+    y = y + bias
+    new_state = full[:, -(width - 1):] if width > 1 else None
+    return y, new_state
+
+
+def ssm_block(cfg: ArchConfig, p, xin, *, sctx: ShardCtx = NO_SHARD,
+              initial_state=None, conv_state=None, return_state: bool = False):
+    """Full-sequence SSD. xin: (B,S,D) -> (B,S,D).
+
+    Chunked algorithm (chunk Q=cfg.ssm_chunk):
+      intra-chunk:  Y_c += ((C_c B_c^T) . L_c) X_c          (quadratic, local)
+      chunk states: S_c = (decay-to-end . B_c)^T X_c        (matmul)
+      inter-chunk:  h via log-depth prefix_scan over (decay, S_c)  <- paper hook
+      readout:      Y_c += (decay-from-start . C_c) h_{c-1} (matmul)
+    """
+    bsz, s, _ = xin.shape
+    di, g, n, h = cfg.d_inner, cfg.ssm_n_groups, cfg.ssm_state, cfg.ssm_n_heads
+    ph = cfg.ssm_head_dim
+    q = min(cfg.ssm_chunk, s)
+    while s % q:
+        q //= 2
+    nc = s // q
+    cdt = xin.dtype
+
+    zxbcdt = dense(xin, p["w_in"])
+    z, xc, bmat, cmat, dt = _split_proj(cfg, zxbcdt)
+
+    conv_in = jnp.concatenate([xc, bmat, cmat], axis=-1)
+    conv_out, new_conv_state = _causal_conv(conv_in, p["conv_w"], p["conv_b"],
+                                            state=conv_state)
+    conv_out = jax.nn.silu(conv_out)
+    xc = conv_out[..., :di]
+    bmat = conv_out[..., di:di + g * n]
+    cmat = conv_out[..., di + g * n:]
+
+    # heads
+    x_h = xc.reshape(bsz, s, h, ph)                      # (B,S,H,P)
+    b_h = bmat.reshape(bsz, s, g, n)
+    c_h = cmat.reshape(bsz, s, g, n)
+    rep = h // g
+    b_h = jnp.repeat(b_h, rep, axis=2)                   # (B,S,H,N)
+    c_h = jnp.repeat(c_h, rep, axis=2)
+
+    x_h = sctx.shard(x_h, sctx.dp, None, sctx.tp, None)
+
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))         # (H,) negative
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))  # (B,S,H)
+    log_decay = dt * a                                   # (B,S,H) = log a_t <= 0
+    xdt = (x_h.astype(jnp.float32) * dt[..., None]).astype(cdt)
+
+    # ---- chunk views (heavy operands in compute dtype; MXU f32 accum) ----
+    xq = xdt.reshape(bsz, nc, q, h, ph)
+    bq = b_h.reshape(bsz, nc, q, h, n).astype(cdt)
+    cq = c_h.reshape(bsz, nc, q, h, n).astype(cdt)
+    ldq = log_decay.reshape(bsz, nc, q, h)
+    cum = jnp.cumsum(ldq, axis=2)                        # within-chunk cumsum
+    chunk_total = cum[:, :, -1]                          # (B,nc,H)
+
+    # ---- intra-chunk quadratic term ----
+    # L[i,j] = exp(cum_i - cum_j) for j <= i  (decay from j+1..i)
+    li = cum[:, :, :, None, :]                           # (B,nc,q,1,H)
+    lj = cum[:, :, None, :, :]                           # (B,nc,1,q,H)
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    lmat = jnp.where(mask[None, None, :, :, None], jnp.exp(li - lj), 0.0)
+    scores = jnp.einsum("bcihn,bcjhn->bcijh", cq, bq,
+                        preferred_element_type=jnp.float32)
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp",
+                         (scores * lmat).astype(cdt), xq,
+                         preferred_element_type=jnp.float32)
+
+    # ---- chunk states: S_c = sum_j decay(j->end) x_j B_j^T ----
+    decay_to_end = jnp.exp(chunk_total[:, :, None, :] - cum)   # (B,nc,q,H)
+    xqd = (xq.astype(jnp.float32)
+           * decay_to_end[..., None]).astype(cdt)
+    s_c = jnp.einsum("bcjhn,bcjhp->bchpn", bq, xqd,
+                     preferred_element_type=jnp.float32)       # (B,nc,H,P,N)
+
+    # ---- inter-chunk recurrence via the log-depth doubling scan (paper) ----
+    # operator per chunk: h -> exp(chunk_total) * h + S_c
+    decay_c = jnp.exp(chunk_total)                             # (B,nc,H)
+
+    def combine(older, newer):
+        a1, s1 = older
+        a2, s2 = newer
+        return a1 * a2, a2[..., None, None] * s1 + s2
+
+    a_scan, h_scan = prefix_scan((decay_c, s_c), combine, axis=1)
+    if initial_state is not None:
+        h0 = initial_state.astype(jnp.float32)                 # (B,H,P,N)
+        h_scan = h_scan + a_scan[..., None, None] * h0[:, None]
+        h_prev = jnp.concatenate([h0[:, None], h_scan[:, :-1]], axis=1)
+    else:
+        h_prev = jnp.concatenate([jnp.zeros_like(h_scan[:, :1]),
+                                  h_scan[:, :-1]], axis=1)
+
+    # ---- inter-chunk readout ----
+    decay_from_start = jnp.exp(cum)                            # (B,nc,q,H)
+    cqd = (cq.astype(jnp.float32)
+           * decay_from_start[..., None]).astype(cdt)
+    y_inter = jnp.einsum("bcihn,bchpn->bcihp", cqd, h_prev.astype(cdt),
+                         preferred_element_type=jnp.float32)
+
+    y = (y_intra + y_inter).reshape(bsz, s, h, ph)
+    y = y + x_h.astype(jnp.float32) * p["D"].astype(jnp.float32)[None, None, :, None]
+    y = y.reshape(bsz, s, di).astype(cdt)
+
+    # gated RMSNorm (mamba2: norm(y * silu(z)))
+    y = norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(cdt), p["norm_w"],
+             kind="rmsnorm", eps=cfg.norm_eps)
+    out = dense(y, p["w_out"])
+    out = sctx.activation(out)
+    if return_state:
+        final_state = h_scan[:, -1]                            # (B,H,N,P)
+        return out, (final_state, new_conv_state)
+    return out
+
+
+def ssm_decode_step(cfg: ArchConfig, p, xin, ssm_state, conv_state, *,
+                    sctx: ShardCtx = NO_SHARD):
+    """O(1) single-token update. xin: (B,1,D); ssm_state: (B,H,P,N) f32;
+    conv_state: (B,W-1,conv_dim). Returns (out, new_ssm_state, new_conv)."""
+    bsz = xin.shape[0]
+    di, g, n, h = cfg.d_inner, cfg.ssm_n_groups, cfg.ssm_state, cfg.ssm_n_heads
+    ph = cfg.ssm_head_dim
+    cdt = xin.dtype
+
+    zxbcdt = dense(xin, p["w_in"])
+    z, xc, bmat, cmat, dt = _split_proj(cfg, zxbcdt)
+    conv_in = jnp.concatenate([xc, bmat, cmat], axis=-1)       # (B,1,conv_dim)
+    conv_out, new_conv = _causal_conv(conv_in, p["conv_w"], p["conv_b"],
+                                      state=conv_state)
+    conv_out = jax.nn.silu(conv_out)
+    xc = conv_out[..., :di]
+    bmat = conv_out[..., di:di + g * n]
+    cmat = conv_out[..., di + g * n:]
+
+    x_h = xc.reshape(bsz, h, ph).astype(jnp.float32)
+    rep = h // g
+    b_h = jnp.repeat(bmat.reshape(bsz, g, n), rep, axis=1).astype(jnp.float32)
+    c_h = jnp.repeat(cmat.reshape(bsz, g, n), rep, axis=1).astype(jnp.float32)
+
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))
+    dt = jax.nn.softplus(dt.reshape(bsz, h).astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+    decay = jnp.exp(dt * a)                                    # (B,H)
+
+    # state: (B,H,P,N);  h' = decay*h + (dt*x) B^T
+    upd = jnp.einsum("bhp,bhn->bhpn", x_h * dt[..., None], b_h)
+    new_state = ssm_state * decay[..., None, None] + upd
+    y = jnp.einsum("bhpn,bhn->bhp", new_state, c_h)
+    y = y + x_h * p["D"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(bsz, 1, di).astype(cdt)
+
+    y = norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(cdt), p["norm_w"],
+             kind="rmsnorm", eps=cfg.norm_eps)
+    out = dense(y, p["w_out"])
+    return sctx.activation(out), new_state, new_conv

@@ -1,0 +1,2 @@
+"""repro.parallel — sharding rules and collective building blocks."""
+from repro.parallel import sharding, collectives

@@ -1,0 +1,241 @@
+"""Parameter/activation PartitionSpec rules — DESIGN.md §6 made executable.
+
+Two regimes:
+  * ``mode="train"``  — FSDP(+TP): every weight 2-D sharded (one dim over
+    "data" for ZeRO-style memory scaling, one over "model" for Megatron TP).
+    GSPMD materializes the per-layer all-gathers inside the layer scan.
+  * ``mode="decode"`` — pure TP: weights sharded over "model" only
+    (replicated across "data"/"pod") so each decoded token pays zero
+    parameter all-gathers. This train/decode asymmetry is hillclimb H2 in
+    EXPERIMENTS.md §Perf.
+
+Divisibility fallbacks (mesh axes are fixed 16x16): any rule axis that does
+not divide the tensor dim is dropped to replication for that dim — this is
+how kv_heads=8/1, vocab=51865, n_experts=8 etc. degrade gracefully
+(documented per-arch in DESIGN.md §7).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.tree_util import DictKey, SequenceKey
+
+__all__ = ["param_specs", "batch_specs", "cache_partition_specs",
+           "named", "spec_tree_to_shardings"]
+
+# Stacked-layer containers -> number of leading scan dims to skip.
+_STACK_DIMS = {"blocks": 1, "enc_blocks": 1, "tail_blocks": 1, "m_blocks": 2}
+
+# (dim -> logical role) per parameter name; roles resolved per mode below.
+# Roles: "fsdp" (shard over data in train), "tp" (shard over model),
+#        None (replicate).
+_PARAM_RULES = {
+    # embeddings: vocab-parallel (Megatron) — logits stay V-sharded over
+    # "model" so the chunked-CE logsumexp psums over model instead of
+    # materializing a replicated (B, chunk, V) tensor.
+    "embed": ("tp", "fsdp"),
+    "lm_head": ("tp", "fsdp"),
+    # attention
+    "wq": ("fsdp", "tp"),
+    "wk": ("fsdp", "tp_kv"),
+    "wv": ("fsdp", "tp_kv"),
+    "wo": ("tp", "fsdp"),
+    "bq": ("tp",), "bk": ("tp_kv",), "bv": ("tp_kv",),
+    # mlp
+    "w_gate": ("fsdp", "tp"),
+    "w_up": ("fsdp", "tp"),
+    "w_down": ("tp", "fsdp"),
+    # moe (leading expert dim)
+    "router": ("fsdp", None),
+    # ssm
+    "w_in": ("fsdp", "tp"),
+    "w_out": ("tp", "fsdp"),
+    "conv_w": (None, "tp"),
+    "conv_b": ("tp",),
+    "norm_w": (None,),
+}
+# MoE expert tensors get an expert-dim role prepended at lookup time.
+_MOE_3D = {"w_gate": ("ep", "fsdp", "tp"), "w_up": ("ep", "fsdp", "tp"),
+           "w_down": ("ep", "tp", "fsdp")}
+
+
+def _leaf_name(path) -> str:
+    for entry in reversed(path):
+        if isinstance(entry, DictKey):
+            return str(entry.key)
+    return ""
+
+
+def _stack_depth(path) -> int:
+    d = 0
+    for entry in path:
+        if isinstance(entry, DictKey) and str(entry.key) in _STACK_DIMS:
+            d += _STACK_DIMS[str(entry.key)]
+    return d
+
+
+def _in_moe(path) -> bool:
+    return any(isinstance(e, DictKey) and str(e.key) == "moe" for e in path)
+
+
+def _resolve_role(role: Optional[str], mode: str, cfg):
+    """role -> mesh axis name(s) or None."""
+    if role is None:
+        return None
+    if role == "fsdp":
+        return "data" if mode == "train" else None
+    if role == "tp":
+        return "model"
+    if role == "tp_kv":
+        # kv projections: shard out-dim over model only if whole kv heads
+        # divide the axis — checked numerically at divisibility time, but
+        # semantically we want head-aligned shards, so require
+        # n_kv_heads % tp == 0 (DESIGN.md §6).
+        return "model"
+    if role == "ep":
+        return "data" if mode == "train" else None
+    raise ValueError(role)
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    n = 1
+    for a in (axes if isinstance(axes, tuple) else (axes,)):
+        n *= mesh.shape[a]
+    return n
+
+
+def _spec_for_leaf(path, leaf, cfg, mesh: Mesh, mode: str):
+    name = _leaf_name(path)
+    nstack = _stack_depth(path)
+    shape = leaf.shape[nstack:]
+
+    if _in_moe(path) and name in _MOE_3D:
+        roles = _MOE_3D[name]
+    elif name in _PARAM_RULES:
+        roles = _PARAM_RULES[name]
+    else:
+        roles = (None,) * len(shape)
+
+    entries = []
+    for dim in range(len(shape)):
+        role = roles[dim] if dim < len(roles) else None
+        axes = _resolve_role(role, mode, cfg)
+        if axes is None:
+            entries.append(None)
+            continue
+        # head-alignment guard for kv projections
+        if role == "tp_kv" and cfg is not None and \
+                cfg.n_kv_heads % _axis_size(mesh, axes):
+            entries.append(None)
+            continue
+        if shape[dim] % _axis_size(mesh, axes):
+            entries.append(None)       # divisibility fallback -> replicate
+            continue
+        entries.append(axes)
+    full = (None,) * nstack + tuple(entries)
+    return P(*full)
+
+
+def param_specs(params, cfg, mesh: Mesh, mode: str = "train"):
+    """PartitionSpec pytree matching ``params`` (same structure)."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _spec_for_leaf(path, leaf, cfg, mesh, mode),
+        params)
+
+
+def state_specs(state_shapes, cfg, mesh: Mesh, mode: str = "train"):
+    """Specs for a full train state {params, opt:{m, v, step}}.
+
+    Optimizer moments inherit the parameter rules (same shapes) except when
+    stored as int8 QTensors, whose (n_blocks, block)/(n_blocks,) leaves are
+    sharded over "data" when divisible.
+    """
+    p_spec = param_specs(state_shapes["params"], cfg, mesh, mode)
+    dsize = mesh.shape["data"]
+
+    def moment_spec(path, leaf):
+        if leaf.ndim >= 1 and leaf.shape[0] % dsize == 0 and \
+                cfg.optimizer_state_dtype == "int8":
+            return P(*(("data",) + (None,) * (leaf.ndim - 1)))
+        if cfg.optimizer_state_dtype == "int8":
+            return P(*((None,) * leaf.ndim))
+        return _spec_for_leaf(path, leaf, cfg, mesh, mode)
+
+    m_spec = jax.tree_util.tree_map_with_path(moment_spec,
+                                              state_shapes["opt"]["m"])
+    v_spec = jax.tree_util.tree_map_with_path(moment_spec,
+                                              state_shapes["opt"]["v"])
+    return {"params": p_spec,
+            "opt": {"m": m_spec, "v": v_spec, "step": P()}}
+
+
+def batch_specs(mesh: Mesh, kind: str):
+    """Specs for the step inputs (tokens/targets/frames/vision_embeds)."""
+    dp = ("pod", "data") if "pod" in mesh.shape else ("data",)
+    tok = P(dp, None)
+    return {"tokens": tok, "targets": tok,
+            "frames": P(dp, None, None),
+            "vision_embeds": P(dp, None, None)}
+
+
+def cache_partition_specs(cache_tree, cfg, mesh: Mesh):
+    """Decode-cache specs: batch over dp; heads over model when divisible."""
+    dp = ("pod", "data") if "pod" in mesh.shape else ("data",)
+    tp_n = mesh.shape["model"]
+
+    def spec(path, leaf):
+        name = _leaf_name(path)
+        if name == "pos":
+            return P(dp if leaf.shape[0] % _axis_size(mesh, dp) == 0
+                     else None)
+        if name in ("k", "v", "enc_k", "enc_v"):
+            # (L, B, C, Hkv, Dh). Preference order for the "model" axis:
+            #   1. kv heads (clean TP) when divisible;
+            #   2. the context dim C — flash-decoding split-KV: partial
+            #      softmax stats psum over model (tiny); the ring write is
+            #      a one-hot select (layers.write_kv_cache) so it shards
+            #      cleanly along C (H3 in EXPERIMENTS.md §Perf — the
+            #      scatter form rematerialized the full cache);
+            #   3. head_dim Dh (score-psum per layer — measured 3x more
+            #      collective than the C split).
+            b_ok = leaf.shape[1] % _axis_size(mesh, dp) == 0
+            bspec = dp if b_ok else None
+            if cfg.n_kv_heads % tp_n == 0:
+                return P(None, bspec, None, "model", None)
+            if leaf.shape[2] % tp_n == 0:
+                return P(None, bspec, "model", None, None)
+            if leaf.shape[4] % tp_n == 0:
+                return P(None, bspec, None, None, "model")
+            return P(None, bspec, None, None, None)
+        if name == "ssm_state":
+            # (L, B, H, P, N)
+            b_ok = leaf.shape[1] % _axis_size(mesh, dp) == 0
+            h_ok = leaf.shape[2] % tp_n == 0
+            p_ok = leaf.shape[3] % tp_n == 0
+            return P(None, dp if b_ok else None,
+                     "model" if h_ok else None,
+                     "model" if (p_ok and not h_ok) else None, None)
+        if name == "conv_state":
+            # (L, B, W-1, conv_dim)
+            b_ok = leaf.shape[1] % _axis_size(mesh, dp) == 0
+            c_ok = leaf.shape[3] % tp_n == 0
+            return P(None, dp if b_ok else None, None,
+                     "model" if c_ok else None)
+        return P(*((None,) * leaf.ndim))
+
+    return jax.tree_util.tree_map_with_path(spec, cache_tree)
+
+
+def named(mesh: Mesh, spec_tree):
+    """PartitionSpec pytree -> NamedSharding pytree."""
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree, is_leaf=lambda x: isinstance(x, P))
+
+
+def spec_tree_to_shardings(mesh, tree):
+    return named(mesh, tree)

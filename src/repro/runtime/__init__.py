@@ -1,0 +1,1 @@
+"""repro.runtime — fault tolerance: retry, straggler watchdog, elastic re-mesh."""

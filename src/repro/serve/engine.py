@@ -1,0 +1,92 @@
+"""Serving engine: batched prefill + decode with sharded KV caches.
+
+``prefill`` builds the cache and returns last-token logits; ``decode_step``
+(from repro.models) advances one token for the whole batch. ``generate``
+is the host driver (greedy or temperature sampling) used by the serving
+example and tests. MoE archs serve with lossless capacity so generation is
+deterministic w.r.t. the teacher-forced forward (tests/test_serve.py).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, cache_specs
+from repro.models import forward, decode_step, unembed
+from repro.models.layers import ShardCtx, NO_SHARD
+
+__all__ = ["serve_config", "init_cache", "prefill", "make_decode_fn",
+           "generate"]
+
+
+def serve_config(cfg: ArchConfig) -> ArchConfig:
+    """Inference-mode config: no remat; MoE capacity 2.0x.
+
+    cf=2.0 is drop-free for any remotely balanced router and HALVES the
+    MoE dispatch buffers + their TP psums versus worst-case lossless
+    capacity (EXPERIMENTS.md §Perf H2: -44% collective bytes on
+    mixtral-8x7b prefill_32k). Single-token decode is always lossless.
+    """
+    kw = {"remat": False}
+    if cfg.n_experts:
+        kw["capacity_factor"] = min(cfg.n_experts / cfg.top_k, 2.0)
+    return cfg.replace(**kw)
+
+
+def init_cache(cfg: ArchConfig, batch: int, cache_len: int):
+    """Zero-filled decode cache (for decode-from-scratch / dry-run)."""
+    specs = cache_specs(cfg, batch, cache_len)
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), specs)
+
+
+def prefill(cfg: ArchConfig, params, tokens, *, cache_len: int,
+            sctx: ShardCtx = NO_SHARD, frames=None, vision_embeds=None):
+    """Run the prompt, build the cache. Returns (last_logits, cache)."""
+    out = forward(cfg, params, tokens, sctx=sctx, frames=frames,
+                  vision_embeds=vision_embeds, return_cache=True,
+                  cache_len=cache_len)
+    last = unembed(cfg, params, out["x"][:, -1:])
+    return last, out["cache"]
+
+
+def make_decode_fn(cfg: ArchConfig, *, sctx: ShardCtx = NO_SHARD):
+    def fn(params, tokens, cache):
+        return decode_step(cfg, params, tokens, cache, sctx=sctx)
+    return fn
+
+
+def _sample(logits, key, temperature: float):
+    if temperature == 0.0:
+        return jnp.argmax(logits, axis=-1)
+    return jax.random.categorical(key, logits / temperature, axis=-1)
+
+
+def generate(cfg: ArchConfig, params, prompt_tokens, *, max_new_tokens: int,
+             cache_len: Optional[int] = None, temperature: float = 0.0,
+             key=None, sctx: ShardCtx = NO_SHARD, frames=None,
+             vision_embeds=None):
+    """Host-side batched generation loop. prompt_tokens: (B, S_prompt)."""
+    cfg = serve_config(cfg)
+    b, s_prompt = prompt_tokens.shape
+    cache_len = cache_len or (s_prompt + max_new_tokens)
+    key = key if key is not None else jax.random.PRNGKey(0)
+
+    pf = jax.jit(functools.partial(prefill, cfg, cache_len=cache_len,
+                                   sctx=sctx))
+    dec = jax.jit(make_decode_fn(cfg, sctx=sctx))
+
+    logits, cache = pf(params, prompt_tokens, frames=frames,
+                       vision_embeds=vision_embeds)
+    outs = []
+    tok = _sample(logits[:, -1], key, temperature)[:, None]
+    outs.append(tok)
+    for i in range(max_new_tokens - 1):
+        key = jax.random.fold_in(key, i)
+        logits, cache = dec(params, tok, cache)
+        tok = _sample(logits[:, -1], key, temperature)[:, None]
+        outs.append(tok)
+    return jnp.concatenate(outs, axis=1)

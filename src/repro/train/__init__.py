@@ -1,0 +1,1 @@
+"""repro.train — optimizer, loss, train-step builder."""

@@ -1,0 +1,55 @@
+"""Chunked cross-entropy — never materializes a (B, S, V) logits tensor.
+
+For 150k vocabs at 4k seq x 256 batch, full logits are 620 GB fp32; this
+computes CE over sequence chunks inside a scan so peak extra memory is
+(B_local, chunk, V_local). The backward recomputes the chunk's unembed —
+the same remat discipline as the layer stack.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ArchConfig
+from repro.models.model import unembed
+
+__all__ = ["chunked_cross_entropy"]
+
+
+def chunked_cross_entropy(cfg: ArchConfig, params, x, targets, *,
+                          chunk: int = 512, mask=None):
+    """Mean next-token CE. x: (B, S, D) pre-logits; targets: (B, S) int32.
+
+    mask: optional (B, S) {0,1}; defaults to all ones.
+    """
+    b, s, _ = x.shape
+    chunk = min(chunk, s)
+    while s % chunk:
+        chunk //= 2
+    n = s // chunk
+    if mask is None:
+        mask = jnp.ones((b, s), jnp.float32)
+
+    xc = x.reshape(b, n, chunk, -1).transpose(1, 0, 2, 3)
+    tc = targets.reshape(b, n, chunk).transpose(1, 0, 2)
+    mc = mask.reshape(b, n, chunk).transpose(1, 0, 2)
+
+    def body(carry, inp):
+        tot, cnt = carry
+        xs, ts, ms = inp
+        logits = unembed(cfg, params, xs)                  # (B, chunk, V) f32
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, ts[..., None],
+                                   axis=-1)[..., 0]
+        ce = (lse - gold) * ms
+        return (tot + jnp.sum(ce), cnt + jnp.sum(ms)), None
+
+    # checkpoint the body: scan-AD would otherwise stash every chunk's
+    # (B, chunk, V) logits — the full logits tensor the chunking exists to
+    # avoid. Backward recomputes the chunk's unembed instead.
+    (tot, cnt), _ = lax.scan(
+        jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable),
+        (jnp.float32(0.0), jnp.float32(0.0)), (xc, tc, mc))
+    return tot / jnp.maximum(cnt, 1.0)

@@ -1,0 +1,144 @@
+"""AdamW with dtype-configurable moment storage (fp32 / bf16 / int8-block).
+
+Self-contained (no optax in this environment). The int8 path uses blockwise
+symmetric quantization (bitsandbytes-style) so grok-1-314b's optimizer
+state fits the assigned 16 GB/chip mesh (DESIGN.md §7): fp32 m+v for 314B
+params is 2.5 TB; int8 m+v is 630 GB -> 1.2 GB/chip at 512 chips.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.collectives import quantize_int8, dequantize_int8
+
+__all__ = ["adamw_init", "adamw_update", "global_norm", "clip_by_global_norm",
+           "cosine_lr", "QTensor"]
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class QTensor:
+    """int8 blockwise-quantized tensor leaf (moment storage)."""
+    q: jax.Array
+    scale: jax.Array
+    shape: tuple
+    n: int
+
+    def tree_flatten(self):
+        return (self.q, self.scale), (self.shape, self.n)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        q, scale = children
+        return cls(q, scale, aux[0], aux[1])
+
+    def dequantize(self, dtype=jnp.float32):
+        return dequantize_int8(self.q, self.scale, (self.shape, self.n),
+                               dtype=dtype)
+
+    @classmethod
+    def quantize(cls, x):
+        q, scale, (shape, n) = quantize_int8(x)
+        return cls(q, scale, tuple(shape), n)
+
+
+def _store(x, dtype: str):
+    if dtype == "int8":
+        return QTensor.quantize(x)
+    return x.astype(jnp.dtype(dtype))
+
+
+def _load(x):
+    if isinstance(x, QTensor):
+        return x.dequantize()
+    return x.astype(jnp.float32)
+
+
+def _store_v(x, dtype: str):
+    """Second moment: int8 stores sqrt(v) — v spans the SQUARE of the
+    gradient range, which blockwise int8 cannot hold (small-v coordinates
+    underflow to 0 and the update explodes). sqrt halves the dynamic range
+    (bitsandbytes uses a nonlinear quantile map for the same reason)."""
+    if dtype == "int8":
+        return QTensor.quantize(jnp.sqrt(x))
+    return x.astype(jnp.dtype(dtype))
+
+
+def _load_v(x):
+    if isinstance(x, QTensor):
+        r = x.dequantize()
+        return r * r
+    return x.astype(jnp.float32)
+
+
+def adamw_init(params, state_dtype: str = "float32"):
+    def fresh(store):
+        # distinct buffers for m and v — aliased leaves would break donation
+        return jax.tree.map(
+            lambda p: store(jnp.zeros(p.shape, jnp.float32), state_dtype),
+            params)
+    return {"m": fresh(_store), "v": fresh(_store_v),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def adamw_update(params, grads, opt_state, *, lr, b1: float = 0.9,
+                 b2: float = 0.95, eps: float = 1e-8,
+                 weight_decay: float = 0.1, state_dtype: str = "float32"):
+    """One AdamW step. Returns (new_params, new_opt_state)."""
+    step = opt_state["step"] + 1
+    b1c = 1.0 - b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32)
+        m32 = _load(m) * b1 + g32 * (1 - b1)
+        v32 = _load_v(v) * b2 + g32 * g32 * (1 - b2)
+        mh = m32 / b1c
+        vh = v32 / b2c
+        # trust-region clip: bounds the per-coordinate step when quantized
+        # moments lose low bits (inert for fp32: |m/sqrt(v)| <~ 3 anyway)
+        adam = jnp.clip(mh / (jnp.sqrt(vh) + eps), -5.0, 5.0)
+        delta = adam + weight_decay * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        return new_p, _store(m32, state_dtype), _store_v(v32, state_dtype)
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.flatten(grads)[0]
+    flat_m = jax.tree.flatten(opt_state["m"],
+                              is_leaf=lambda x: isinstance(x, QTensor))[0]
+    flat_v = jax.tree.flatten(opt_state["v"],
+                              is_leaf=lambda x: isinstance(x, QTensor))[0]
+    out = [upd(p, g, m, v) for p, g, m, v in
+           zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(treedef, [o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v, "step": step}
+
+
+def global_norm(tree) -> jax.Array:
+    sq = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+          for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(sq)))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    factor = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda x: (x.astype(jnp.float32) * factor
+                                   ).astype(x.dtype), tree), norm
+
+
+def cosine_lr(step, *, peak: float, warmup: int, total: int,
+              floor_frac: float = 0.1):
+    step = step.astype(jnp.float32)
+    warm = peak * (step + 1.0) / max(warmup, 1)
+    frac = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    cos = peak * (floor_frac + (1 - floor_frac) * 0.5 *
+                  (1 + jnp.cos(jnp.pi * frac)))
+    return jnp.where(step < warmup, warm, cos)

@@ -1,0 +1,119 @@
+"""Train-step builder: microbatch-accumulation scan + AdamW + clip.
+
+``make_train_step(cfg, sctx)`` returns ``step(state, batch) -> (state,
+metrics)`` suitable for ``jax.jit`` with the sharding trees from
+``repro.parallel.sharding``. The gradient-accumulation loop is a
+``lax.scan`` over ``cfg.grad_accum`` microbatches — required to fit
+train_4k activations for the >=34B archs (DESIGN.md §6).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ArchConfig
+from repro.models import forward
+from repro.models.layers import ShardCtx, NO_SHARD
+from repro.train.loss import chunked_cross_entropy
+from repro.train.optimizer import (adamw_init, adamw_update,
+                                   clip_by_global_norm, cosine_lr)
+
+__all__ = ["make_train_step", "init_train_state", "loss_and_metrics"]
+
+AUX_COEF = 0.01        # MoE load-balance coefficient (Switch default-ish)
+
+
+def init_train_state(cfg: ArchConfig, params):
+    return {"params": params,
+            "opt": adamw_init(params, cfg.optimizer_state_dtype)}
+
+
+def loss_and_metrics(cfg: ArchConfig, params, batch, *,
+                     sctx: ShardCtx = NO_SHARD):
+    out = forward(cfg, params, batch["tokens"],
+                  frames=batch.get("frames"),
+                  vision_embeds=batch.get("vision_embeds"),
+                  sctx=sctx)
+    x = out["x"]
+    if cfg.family == "vlm" and cfg.n_vision_tokens:
+        x = x[:, cfg.n_vision_tokens:]
+    ce = chunked_cross_entropy(cfg, params, x, batch["targets"])
+    loss = ce + AUX_COEF * out["aux"]
+    return loss, {"ce": ce, "aux": out["aux"]}
+
+
+def _split_microbatches(batch, accum: int):
+    def split(x):
+        return x.reshape((accum, x.shape[0] // accum) + x.shape[1:])
+    return jax.tree.map(split, batch)
+
+
+def make_train_step(cfg: ArchConfig, *, sctx: ShardCtx = NO_SHARD,
+                    peak_lr: float = 3e-4, warmup: int = 100,
+                    total_steps: int = 10_000, clip_norm: float = 1.0,
+                    weight_decay: float = 0.1, accum: Optional[int] = None,
+                    cast_params: str = "step"):
+    """``cast_params``:
+      * "step"       — cast fp32 master -> bf16 ONCE per step, outside the
+        grad/accumulation loop. The FSDP weight all-gathers and the gradient
+        all-reduce then move bf16 — HALF the wire bytes of the naive
+        placement (hillclimb H2 in EXPERIMENTS.md §Perf).
+      * "microbatch" — naive placement: the cast lives inside the loss, so
+        GSPMD gathers fp32 master weights every microbatch. Kept for the
+        baseline measurement.
+    """
+    accum = accum or cfg.grad_accum
+
+    def step(state, batch):
+        params = state["params"]
+
+        from repro.models.model import _cast_params
+        if cast_params == "step":
+            compute_params = _cast_params(cfg, params)
+        else:
+            compute_params = params
+
+        def loss_fn(p, mb):
+            loss, metrics = loss_and_metrics(cfg, p, mb, sctx=sctx)
+            return loss, metrics
+
+        grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+        if accum > 1:
+            micro = _split_microbatches(batch, accum)
+
+            def acc_body(carry, mb):
+                g_acc, l_acc = carry
+                (loss, metrics), g = grad_fn(compute_params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+                return (g_acc, l_acc + loss), metrics
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (g_sum, loss_sum), metrics = lax.scan(
+                acc_body, (g0, jnp.float32(0.0)), micro)
+            grads = jax.tree.map(lambda g: g / accum, g_sum)
+            loss = loss_sum / accum
+            metrics = jax.tree.map(lambda m: m[-1], metrics)
+        else:
+            (loss, metrics), grads = grad_fn(compute_params, batch)
+
+        grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        lr = cosine_lr(state["opt"]["step"], peak=peak_lr, warmup=warmup,
+                       total=total_steps)
+        new_params, new_opt = adamw_update(
+            params, grads, state["opt"], lr=lr,
+            weight_decay=weight_decay,
+            state_dtype=cfg.optimizer_state_dtype)
+        new_state = {"params": new_params, "opt": new_opt}
+        out_metrics = dict(metrics)
+        out_metrics.update(loss=loss, grad_norm=gnorm, lr=lr)
+        return new_state, out_metrics
+
+    return step

@@ -1,0 +1,13 @@
+import os
+
+# Smoke tests and benches must see exactly ONE device (assignment: the
+# 512-device override belongs to launch/dryrun.py only). Subprocess-based
+# distributed tests set XLA_FLAGS in their own child environments.
+os.environ.pop("XLA_FLAGS", None)
+
+import sys
+from pathlib import Path
+
+SRC = Path(__file__).resolve().parent.parent / "src"
+if str(SRC) not in sys.path:
+    sys.path.insert(0, str(SRC))

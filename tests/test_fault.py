@@ -1,0 +1,82 @@
+"""Fault-tolerance runtime: watchdog, retry, elastic mesh planning."""
+
+import pytest
+
+from repro.runtime.fault import (Watchdog, retry_step, plan_elastic_mesh,
+                                 StragglerEvent)
+
+
+class TestWatchdog:
+    def test_no_event_during_warmup(self):
+        dog = Watchdog(min_samples=5)
+        for i in range(4):
+            assert dog.observe(i, 1.0) is None
+
+    def test_straggler_detected(self):
+        dog = Watchdog(timeout_factor=3.0, min_samples=5)
+        for i in range(8):
+            dog.observe(i, 1.0)
+        ev = dog.observe(8, 10.0)
+        assert isinstance(ev, StragglerEvent)
+        assert ev.duration_s == 10.0
+        assert "straggler" in str(ev)
+
+    def test_median_robust_to_single_spike(self):
+        dog = Watchdog(timeout_factor=3.0, min_samples=5)
+        for i in range(8):
+            dog.observe(i, 1.0)
+        dog.observe(8, 10.0)             # spike
+        assert dog.observe(9, 1.1) is None   # back to normal -> no event
+
+
+class TestRetry:
+    def test_succeeds_after_transient_failures(self):
+        calls = {"n": 0}
+
+        def flaky():
+            calls["n"] += 1
+            if calls["n"] < 3:
+                raise RuntimeError("transient")
+            return "ok"
+
+        assert retry_step(flaky, retries=3, backoff_s=0.0) == "ok"
+        assert calls["n"] == 3
+
+    def test_exhausts_and_reraises(self):
+        def broken():
+            raise RuntimeError("persistent")
+
+        with pytest.raises(RuntimeError, match="persistent"):
+            retry_step(broken, retries=2, backoff_s=0.0)
+
+    def test_on_retry_callback(self):
+        seen = []
+
+        def flaky():
+            if len(seen) < 1:
+                raise ValueError("x")
+            return 1
+
+        retry_step(flaky, retries=2, backoff_s=0.0,
+                   on_retry=lambda a, e: seen.append((a, str(e))))
+        assert seen == [(1, "x")]
+
+
+class TestElasticMesh:
+    def test_full_pod(self):
+        shape, axes = plan_elastic_mesh(256, tp=16)
+        assert shape == (16, 16) and axes == ("data", "model")
+
+    def test_lost_one_host_row(self):
+        # 248 healthy chips -> drop to 15 data rows, TP intact
+        shape, _ = plan_elastic_mesh(248, tp=16)
+        assert shape == (15, 16)
+        assert shape[0] * shape[1] <= 248
+
+    def test_degrade_tp_when_tiny(self):
+        shape, _ = plan_elastic_mesh(8, tp=16)
+        assert shape[1] <= 8 and shape[0] * shape[1] <= 8
+
+    def test_single_chip(self):
+        shape, _ = plan_elastic_mesh(1, tp=16)
+        assert shape == (1, 1)

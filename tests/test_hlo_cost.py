@@ -1,0 +1,93 @@
+"""Trip-count-aware HLO cost analyzer vs XLA cost_analysis + known scans."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.analysis.hlo_cost import analyze_hlo
+from repro.analysis.roofline import model_flops, PEAK_FLOPS
+
+
+def _compile(fn, *specs):
+    return jax.jit(fn).lower(*specs).compile()
+
+
+def test_matches_xla_on_scan_free_dot():
+    f = lambda a, b: a @ b
+    s = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+    comp = _compile(f, s, s)
+    got = analyze_hlo(comp.as_text(), 1)
+    assert got.flops == comp.cost_analysis()["flops"]
+    assert got.flops == 2 * 256 ** 3
+
+
+def test_scan_multiplies_flops():
+    def g(x):
+        def body(c, _):
+            return c @ c, None
+        y, _ = jax.lax.scan(body, x, None, length=8)
+        return y
+    s = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    comp = _compile(g, s)
+    got = analyze_hlo(comp.as_text(), 1)
+    assert got.flops == 8 * 2 * 128 ** 3
+    assert got.unknown_trip_counts == 0
+
+
+def test_nested_scan():
+    def h(x):
+        def outer(c, _):
+            def inner(ci, _):
+                return ci @ ci, None
+            y, _ = jax.lax.scan(inner, c, None, length=3)
+            return y, None
+        y, _ = jax.lax.scan(outer, x, None, length=5)
+        return y
+    s = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    comp = _compile(h, s)
+    got = analyze_hlo(comp.as_text(), 1)
+    assert got.flops == 15 * 2 * 64 ** 3
+
+
+def test_scan_stack_write_bytes_linear_not_quadratic():
+    """The stacked-ys DUS must be charged slice-size per iteration: total
+    bytes for L iterations ~ O(L * slice), NOT O(L^2 * slice)."""
+    def g(x):
+        def body(c, _):
+            c2 = c @ c
+            return c2, c2
+        _, ys = jax.lax.scan(body, x, None, length=32)
+        return ys
+    s = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    comp = _compile(g, s)
+    got = analyze_hlo(comp.as_text(), 1)
+    slice_bytes = 128 * 128 * 4
+    # generous bound: a few touches per iteration, but nowhere near 32x
+    assert got.bytes < 32 * slice_bytes * 16
+    assert got.bytes > 32 * slice_bytes        # at least one write each
+
+
+def test_elementwise_chain_fuses():
+    """A chain of elementwise ops must be charged ~input+output once, not
+    once per op (TPU-fusion model)."""
+    def f(x):
+        y = x * 2.0
+        y = y + 1.0
+        y = jnp.tanh(y)
+        y = y - 0.5
+        return y
+    s = jax.ShapeDtypeStruct((1024, 1024), jnp.float32)
+    comp = _compile(f, s)
+    got = analyze_hlo(comp.as_text(), 1)
+    nbytes = 1024 * 1024 * 4
+    assert got.bytes <= 3 * nbytes   # input + output (+ slack)
+
+
+def test_model_flops_formulas():
+    from repro.configs import get_config, SHAPES
+    cfg = get_config("qwen3-1.7b")
+    n = cfg.n_active_params()
+    sh = SHAPES["train_4k"]
+    assert model_flops(cfg, sh) == 6.0 * n * sh.global_batch * sh.seq_len
+    shd = SHAPES["decode_32k"]
+    assert model_flops(cfg, shd) == 2.0 * n * shd.global_batch

@@ -1,0 +1,119 @@
+"""Pallas kernels vs pure-jnp oracles — shape x dtype sweep, interpret mode.
+
+Per the assignment: "For each Pallas kernel, sweep shapes/dtypes and
+assert_allclose against the ref.py pure-jnp oracle."
+"""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+from repro.kernels.matmul import matmul_pallas
+
+
+RTOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
+
+
+def _rand(shape, dtype, seed):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal(shape), dtype)
+
+
+class TestMatmulKernel:
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize("mkn", [
+        (128, 128, 128), (256, 128, 384), (512, 512, 512),
+        (384, 640, 256), (128, 1024, 128),
+    ])
+    def test_block_divisible(self, mkn, dtype):
+        m, k, n = mkn
+        a, b = _rand((m, k), dtype, 0), _rand((k, n), dtype, 1)
+        got = matmul_pallas(a, b, block_m=128, block_n=128, block_k=128,
+                            interpret=True)
+        want = ref.matmul_ref(a, b)
+        np.testing.assert_allclose(np.float32(got), np.float32(want),
+                                   rtol=RTOL[dtype], atol=1e-2)
+
+    @pytest.mark.parametrize("mkn", [
+        (33, 257, 129), (1, 128, 1), (130, 70, 50), (511, 513, 127),
+    ])
+    def test_padding_path(self, mkn):
+        """ops.matmul pads arbitrary shapes to block multiples."""
+        m, k, n = mkn
+        a, b = _rand((m, k), jnp.float32, 2), _rand((k, n), jnp.float32, 3)
+        got = ops.matmul(a, b, interpret=True)
+        np.testing.assert_allclose(np.asarray(got),
+                                   np.asarray(ref.matmul_ref(a, b)),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_batched(self):
+        a = _rand((3, 130, 70), jnp.float32, 4)
+        b = _rand((3, 70, 50), jnp.float32, 5)
+        got = ops.matmul(a, b, interpret=True)
+        want = jnp.matmul(a, b)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_accumulation_exactness_vs_naive_ref(self):
+        """fp32 accumulation matches the paper's sequential oracle even
+        with a deep K loop (K >> block_k)."""
+        a = _rand((128, 2048), jnp.bfloat16, 6)
+        b = _rand((2048, 128), jnp.bfloat16, 7)
+        got = matmul_pallas(a, b, block_m=128, block_n=128, block_k=128,
+                            interpret=True)
+        want = ref.matmul_ref(a, b)
+        np.testing.assert_allclose(np.float32(got), np.float32(want),
+                                   rtol=2e-2, atol=2e-2)
+
+    @given(st.integers(1, 4), st.integers(1, 4), st.integers(1, 4),
+           st.integers(0, 100))
+    @settings(max_examples=10, deadline=None)
+    def test_property_random_blocks(self, mi, ki, ni, seed):
+        m, k, n = mi * 128, ki * 128, ni * 128
+        a, b = _rand((m, k), jnp.float32, seed), _rand((k, n), jnp.float32,
+                                                       seed + 1)
+        got = matmul_pallas(a, b, block_m=128, block_n=128, block_k=128,
+                            interpret=True)
+        np.testing.assert_allclose(np.asarray(got),
+                                   np.asarray(ref.matmul_ref(a, b)),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_block_picker_fits_budget(self):
+        bm, bn, bk = ops.pick_blocks(4096, 4096, 4096)
+        assert bm % 128 == 0 and bn % 128 == 0 and bk % 128 == 0
+        footprint = 2 * (bm * bk + bk * bn) * 2 + bm * bn * 4
+        assert footprint <= 8 * 1024 * 1024
+
+
+class TestAttentionKernel:
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize("cfg", [
+        dict(sq=256, skv=256, d=64, causal=True, window=None),
+        dict(sq=128, skv=512, d=64, causal=True, window=None),
+        dict(sq=256, skv=256, d=128, causal=True, window=64),
+        dict(sq=256, skv=256, d=64, causal=False, window=None),
+    ])
+    def test_flash_vs_ref(self, cfg, dtype):
+        q = _rand((cfg["sq"], cfg["d"]), dtype, 10)
+        k = _rand((cfg["skv"], cfg["d"]), dtype, 11)
+        v = _rand((cfg["skv"], cfg["d"]), dtype, 12)
+        got = ops.attention(q, k, v, causal=cfg["causal"],
+                            window=cfg["window"], interpret=True,
+                            block_q=128, block_k=128)
+        want = ref.flash_attention_ref(q, k, v, causal=cfg["causal"],
+                                       window=cfg["window"])
+        np.testing.assert_allclose(np.float32(got), np.float32(want),
+                                   rtol=RTOL[dtype], atol=3e-2
+                                   if dtype == jnp.bfloat16 else 2e-5)
+
+    def test_online_softmax_stability(self):
+        """Large score magnitudes must not overflow the running max."""
+        q = jnp.ones((128, 64), jnp.float32) * 30.0
+        k = jnp.ones((128, 64), jnp.float32) * 30.0
+        v = _rand((128, 64), jnp.float32, 13)
+        got = ops.attention(q, k, v, causal=True, interpret=True,
+                            block_q=128, block_k=128)
+        assert not bool(jnp.isnan(got).any())

@@ -1,0 +1,202 @@
+"""Paper-core correctness: matpow naive/binary/traced + expm + prefix scans.
+
+Property-based (hypothesis) on the algebraic invariants the paper's
+precision checks rely on; fp64 oracle via numpy.
+"""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (matpow_naive, matpow_binary, matpow_binary_traced,
+                        expm, prefix_products, prefix_scan, decay_prefix)
+
+SET = dict(max_examples=25, deadline=None)
+
+
+def _mat(n, seed, scale=0.3):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal((n, n)) * scale, jnp.float32)
+
+
+def _ref_pow(a, n):
+    return np.linalg.matrix_power(np.asarray(a, np.float64), n)
+
+
+class TestMatpow:
+    @pytest.mark.parametrize("n", [0, 1, 2, 3, 7, 16, 64, 513])
+    def test_binary_matches_numpy(self, n):
+        a = _mat(12, seed=n)
+        got = np.asarray(matpow_binary(a, n))
+        # fp32 rounding compounds over ~log2(n) multiplies; scale rtol.
+        rtol = 2e-4 * max(1, int(np.log2(max(n, 2))) - 3)
+        np.testing.assert_allclose(got, _ref_pow(a, n), rtol=rtol, atol=1e-5)
+
+    @pytest.mark.parametrize("n", [1, 5, 12])
+    def test_naive_matches_binary(self, n):
+        a = _mat(10, seed=100 + n)
+        np.testing.assert_allclose(np.asarray(matpow_naive(a, n)),
+                                   np.asarray(matpow_binary(a, n)),
+                                   rtol=1e-4, atol=1e-6)
+
+    @pytest.mark.parametrize("n", [0, 1, 6, 29, 64])
+    def test_traced_matches_static(self, n):
+        a = _mat(9, seed=200 + n)
+        traced = jax.jit(lambda a, k: matpow_binary_traced(a, k))
+        np.testing.assert_allclose(np.asarray(traced(a, jnp.int32(n))),
+                                   np.asarray(matpow_binary(a, n)),
+                                   rtol=1e-4, atol=1e-6)
+
+    def test_batched(self):
+        a = jnp.stack([_mat(8, 1), _mat(8, 2)])
+        got = np.asarray(matpow_binary(a, 5))
+        for i in range(2):
+            np.testing.assert_allclose(got[i], _ref_pow(a[i], 5),
+                                       rtol=2e-4, atol=1e-5)
+
+    def test_pallas_backend_interpret(self):
+        a = _mat(128, seed=3, scale=0.2)
+        got = np.asarray(matpow_binary(a, 9, backend="pallas_interpret"))
+        np.testing.assert_allclose(got, _ref_pow(a, 9), rtol=2e-3, atol=1e-4)
+
+    def test_rejects_traced_static_api(self):
+        with pytest.raises(TypeError):
+            matpow_binary(_mat(4, 0), jnp.int32(3))
+
+    def test_rejects_negative(self):
+        with pytest.raises(ValueError):
+            matpow_binary(_mat(4, 0), -1)
+
+    def test_rejects_nonsquare(self):
+        with pytest.raises(ValueError):
+            matpow_binary(jnp.ones((3, 4)), 2)
+
+
+class TestMatpowProperties:
+    @given(st.integers(0, 40), st.integers(0, 40), st.integers(0, 1000))
+    @settings(**SET)
+    def test_power_addition(self, m, n, seed):
+        """A^(m+n) == A^m @ A^n."""
+        a = _mat(6, seed, scale=0.4)
+        lhs = np.asarray(matpow_binary(a, m + n), np.float64)
+        rhs = np.asarray(matpow_binary(a, m), np.float64) @ \
+            np.asarray(matpow_binary(a, n), np.float64)
+        np.testing.assert_allclose(lhs, rhs, rtol=5e-3, atol=1e-4)
+
+    @given(st.integers(1, 6), st.integers(1, 6), st.integers(0, 1000))
+    @settings(**SET)
+    def test_power_of_power(self, m, n, seed):
+        """(A^m)^n == A^(m*n)."""
+        a = _mat(5, seed, scale=0.35)
+        lhs = np.asarray(matpow_binary(matpow_binary(a, m), n), np.float64)
+        rhs = np.asarray(matpow_binary(a, m * n), np.float64)
+        np.testing.assert_allclose(lhs, rhs, rtol=5e-3, atol=1e-4)
+
+    @given(st.integers(0, 64), st.integers(0, 1000))
+    @settings(**SET)
+    def test_identity_commutes(self, n, seed):
+        """I^n == I and A^0 == I."""
+        eye = jnp.eye(7)
+        np.testing.assert_allclose(np.asarray(matpow_binary(eye, n)),
+                                   np.eye(7), atol=1e-6)
+        a = _mat(7, seed)
+        np.testing.assert_allclose(np.asarray(matpow_binary(a, 0)),
+                                   np.eye(7), atol=1e-6)
+
+    @given(st.integers(2, 512), st.integers(0, 1000))
+    @settings(**SET)
+    def test_multiply_count_is_logarithmic(self, n, seed):
+        """The binary chain uses <= 2*floor(log2 n) multiplies (the paper's
+        O(N) -> O(log N) claim), counted via a counting backend."""
+        calls = []
+        import repro.core.matpow as M
+        real = M.matmul_backend
+
+        def counting_backend(backend="xla", precision=None):
+            mm = real(backend, precision)
+
+            def wrapped(a, b):
+                calls.append(1)
+                return mm(a, b)
+            return wrapped
+
+        M.matmul_backend, orig = counting_backend, real
+        try:
+            matpow_binary(_mat(4, seed), n)
+        finally:
+            M.matmul_backend = orig
+        assert len(calls) <= 2 * int(np.floor(np.log2(n))) + 1
+
+
+class TestExpm:
+    @pytest.mark.parametrize("scale", [0.1, 1.0, 5.0])
+    def test_expm_vs_eig(self, scale):
+        rng = np.random.default_rng(int(scale * 10))
+        a = rng.standard_normal((10, 10)) * scale
+        # symmetrize for a well-conditioned eig reference
+        a = (a + a.T) / 2
+        w, v = np.linalg.eigh(a)
+        ref = v @ np.diag(np.exp(w)) @ v.T
+        got = np.asarray(expm(jnp.asarray(a, jnp.float32)), np.float64)
+        np.testing.assert_allclose(got, ref, rtol=2e-3, atol=1e-4)
+
+    def test_expm_zero_is_identity(self):
+        np.testing.assert_allclose(np.asarray(expm(jnp.zeros((6, 6)))),
+                                   np.eye(6), atol=1e-6)
+
+    @given(st.integers(0, 1000))
+    @settings(max_examples=10, deadline=None)
+    def test_expm_inverse_property(self, seed):
+        """e^A @ e^-A == I."""
+        a = np.asarray(_mat(6, seed, scale=0.5), np.float64)
+        lhs = np.asarray(expm(jnp.asarray(a, jnp.float32)), np.float64) @ \
+            np.asarray(expm(jnp.asarray(-a, jnp.float32)), np.float64)
+        np.testing.assert_allclose(lhs, np.eye(6), atol=5e-4)
+
+
+class TestPrefixScan:
+    @given(st.integers(1, 33), st.integers(0, 1000))
+    @settings(**SET)
+    def test_prefix_products_vs_loop(self, t, seed):
+        rng = np.random.default_rng(seed)
+        mats = jnp.asarray(rng.standard_normal((t, 4, 4)) * 0.4, jnp.float32)
+        got = np.asarray(prefix_products(mats), np.float64)
+        acc = np.eye(4)
+        for i in range(t):
+            acc = np.asarray(mats[i], np.float64) @ acc
+            np.testing.assert_allclose(got[i], acc, rtol=5e-3, atol=1e-4)
+
+    @given(st.integers(1, 64), st.integers(0, 1000))
+    @settings(**SET)
+    def test_prefix_scan_add_is_cumsum(self, t, seed):
+        rng = np.random.default_rng(seed)
+        x = jnp.asarray(rng.standard_normal((t,)), jnp.float32)
+        got = np.asarray(prefix_scan(x, lambda a, b: a + b))
+        np.testing.assert_allclose(got, np.cumsum(np.asarray(x)),
+                                   rtol=1e-4, atol=1e-5)
+
+    def test_prefix_scan_pytree(self):
+        """The SSD operator (a, s): composition scan matches a loop."""
+        rng = np.random.default_rng(0)
+        a = jnp.asarray(rng.uniform(0.5, 1.0, (9,)), jnp.float32)
+        s = jnp.asarray(rng.standard_normal((9,)), jnp.float32)
+
+        def combine(old, new):
+            a1, s1 = old
+            a2, s2 = new
+            return a1 * a2, a2 * s1 + s2
+
+        ga, gs = prefix_scan((a, s), combine)
+        h, aa = 0.0, 1.0
+        for i in range(9):
+            h = float(a[i]) * h + float(s[i])
+            aa *= float(a[i])
+            assert abs(float(gs[i]) - h) < 1e-4
+            assert abs(float(ga[i]) - aa) < 1e-5
+
+    def test_decay_prefix_logspace(self):
+        ld = jnp.log(jnp.asarray([0.5, 0.9, 0.8], jnp.float32))
+        got = np.exp(np.asarray(decay_prefix(ld)))
+        np.testing.assert_allclose(got, [0.5, 0.45, 0.36], rtol=1e-5)
