@@ -18,8 +18,11 @@ _CHILD = """
 import time, numpy as np, jax, jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.core import matmul_2d_gather, matmul_cannon, matpow_sharded
-mesh = jax.make_mesh((2,2), ("data","model"),
-                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+try:  # jax.sharding.AxisType is newer-jax only; older make_mesh acts as Auto
+    mesh = jax.make_mesh((2,2), ("data","model"),
+                         axis_types=(jax.sharding.AxisType.Auto,)*2)
+except AttributeError:
+    mesh = jax.make_mesh((2,2), ("data","model"))
 sh = NamedSharding(mesh, P("data","model"))
 n = 512
 a = jax.device_put(jax.random.normal(jax.random.PRNGKey(0), (n,n))*0.1, sh)

@@ -10,6 +10,10 @@ TPU:
     intensity_flops_b   arithmetic intensity of one grid step
     mxu_aligned         all dims multiples of 128?
 plus a correctness check against ref.matmul_ref at every config.
+
+The sweep also feeds the persistent autotuner (repro.kernels.autotune): the
+winning tiling is recorded under the problem key so ops.pick_blocks — and
+therefore every ops.matmul / MatmulChain on this problem size — reuses it.
 """
 
 from __future__ import annotations
@@ -18,13 +22,13 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import ref
+from repro.kernels import autotune, ref
 from repro.kernels.matmul import matmul_pallas
 
 M = K = N = 1024
-BLOCKS = [(128, 128, 128), (256, 256, 256), (512, 512, 512),
-          (512, 512, 256), (256, 512, 512), (128, 512, 512),
-          (512, 128, 512)]
+# One candidate list and one VMEM model for the whole system: the sweep
+# displays, scores, and records exactly what ops.pick_blocks will consume.
+BLOCKS = autotune.DEFAULT_CANDIDATES
 
 
 def main(rows=None):
@@ -40,7 +44,7 @@ def main(rows=None):
                             interpret=True)
         err = float(np.abs(np.float32(got) - want).max())
         rel = err / float(np.abs(want).max())
-        vmem = (2 * (bm * bk + bk * bn) * 2 + bm * bn * 4) / 1024
+        vmem = autotune.vmem_footprint((bm, bn, bk), itemsize=2) / 1024
         flops = 2 * bm * bn * bk
         byts = (bm * bk + bk * bn) * 2 + bm * bn * 4
         rows.append({
@@ -50,6 +54,25 @@ def main(rows=None):
                         f"mxu_aligned={all(x % 128 == 0 for x in (bm, bn, bk))};"
                         f"rel_err={rel:.1e}"),
         })
+
+    # Record the winner in the persistent autotune cache (measured wall-clock
+    # on TPU, the analytic model here) so pick_blocks reuses this sweep.
+    best, results = autotune.sweep(M, N, K, dtype=jnp.bfloat16,
+                                   candidates=BLOCKS)
+    # Also publish under the dtype-agnostic key so float32 matmul/chain
+    # lookups on this problem size hit too (pick_blocks re-validates the
+    # footprint per-dtype before trusting any cache entry). Thread the
+    # winner's score/measured provenance through rather than re-defaulting.
+    win = next((r for r in results if tuple(r["blocks"]) == tuple(best)), None)
+    autotune.record(M, N, K, best, dtype=None,
+                    score=None if win is None else win["score"],
+                    measured=bool(win and win["measured"]))
+    rows.append({
+        "name": f"autotune_sweep_{M}x{N}x{K}",
+        "us_per_call": 0.0,
+        "derived": (f"best_blocks={'x'.join(map(str, best))};"
+                    f"cache={autotune.cache_path()}"),
+    })
     if own:
         for r in rows:
             print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")

@@ -11,6 +11,7 @@ from repro.core.matpow import (
     matpow_binary,
     matpow_binary_traced,
     matmul_backend,
+    chain_for,
 )
 from repro.core.expm import expm
 from repro.core.scan import prefix_scan, prefix_products, decay_prefix
@@ -23,6 +24,7 @@ from repro.core.distributed import (
 
 __all__ = [
     "matpow_naive", "matpow_binary", "matpow_binary_traced", "matmul_backend",
+    "chain_for",
     "expm", "prefix_scan", "prefix_products", "decay_prefix",
     "matmul_2d_gather", "matmul_cannon", "sharded_matmul", "matpow_sharded",
 ]

@@ -16,6 +16,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.core import matpow
+
 __all__ = ["expm"]
 
 # Pade-13 coefficients (Higham, "The Scaling and Squaring Method for the
@@ -40,7 +42,8 @@ def _pade13(a: jax.Array, ident: jax.Array):
     return u, v
 
 
-def expm(a: jax.Array, *, max_squarings: int = 32) -> jax.Array:
+def expm(a: jax.Array, *, max_squarings: int = 32,
+         backend: str = "xla") -> jax.Array:
     """Matrix exponential via Pade-13 + the paper's repeated-squaring chain.
 
     Supports batched stacks (..., n, n). The number of squarings is data
@@ -48,6 +51,12 @@ def expm(a: jax.Array, *, max_squarings: int = 32) -> jax.Array:
     ``max_squarings`` with a mask (keeps one compiled program; each masked
     squaring is a select, each live one a matmul — the log-depth structure
     of matpow_binary with data-dependent depth).
+
+    ``backend`` selects the squaring-chain multiply route, same names as
+    :func:`repro.core.matpow.matmul_backend`; ``"pallas_chain"`` pads the
+    Pade result once, squares on the padded buffer through the single-ref
+    kernel, and un-pads once at the end. The small fixed Pade polynomial
+    (6 matmuls + one solve) stays on XLA — it is not a chain.
     """
     if a.shape[-1] != a.shape[-2]:
         raise ValueError(f"expm needs square matrices, got {a.shape}")
@@ -65,13 +74,27 @@ def expm(a: jax.Array, *, max_squarings: int = 32) -> jax.Array:
     # r = (v - u)^-1 (v + u)
     r = jnp.linalg.solve(v - u, v + u)
 
+    # Squarings run inside the fori_loop (always traced) — donation never
+    # fires, so skip the donate-enabled chain's defensive pad-time copy.
+    chain = matpow.chain_for(r, backend, donate=False)
+    if chain is not None:
+        square = chain.square
+        r = chain.pad(r)
+    elif backend == "xla":
+        square = lambda x: x @ x
+    else:
+        mm = matpow.matmul_backend(backend)
+        square = lambda x: mm(x, x)
+
     s_scalar = jnp.max(s)  # batched: square to the max, masking finished ones
 
     def body(i, val):
         r_cur = val
-        sq = r_cur @ r_cur
+        sq = square(r_cur)
         keep = (i < s).astype(compute.dtype)  # broadcast (..., 1, 1)
         return keep * sq + (1.0 - keep) * r_cur
 
     r = lax.fori_loop(0, s_scalar, body, r)
+    if chain is not None:
+        r = chain.unpad(r)
     return r.astype(dtype)

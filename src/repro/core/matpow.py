@@ -17,6 +17,13 @@ Beyond the paper:
   * ``backend="pallas"`` routes every multiply through the tiled Pallas TPU
     kernel (``repro.kernels``), the TPU adaptation of the paper's tiled
     OpenCL kernel.
+  * ``backend="pallas_chain"`` runs the whole squaring/combine chain fused
+    (``repro.kernels.ops.MatmulChain``): the operand is padded to block
+    multiples ONCE at entry, every multiply runs block-divisible on the
+    padded buffer (squarings through the single-ref ``square_pallas`` kernel
+    with HBM buffer donation), and the result is un-padded once at exit —
+    vs one pad/unpad/block-pick per multiply on the plain ``pallas`` route.
+    ``"pallas_chain_interpret"`` is its CPU-validation twin.
   * ``matpow_sharded`` (see ``repro.core.distributed``) runs each squaring as
     a SUMMA collective matmul over a device mesh.
 """
@@ -35,7 +42,12 @@ __all__ = [
     "matpow_binary",
     "matpow_binary_traced",
     "matmul_backend",
+    "chain_for",
 ]
+
+
+# backend name -> interpret flag for the fused chain-execution route.
+_CHAIN_BACKENDS = {"pallas_chain": False, "pallas_chain_interpret": True}
 
 
 def matmul_backend(backend: str = "xla", precision=None) -> Callable:
@@ -45,6 +57,10 @@ def matmul_backend(backend: str = "xla", precision=None) -> Callable:
       * ``"xla"``    — jnp.matmul with fp32 accumulation (CPU/GPU/TPU).
       * ``"pallas"`` — the tiled Pallas TPU kernel (repro.kernels.ops.matmul).
       * ``"pallas_interpret"`` — same kernel, interpret mode (CPU validation).
+      * ``"pallas_chain"`` / ``"pallas_chain_interpret"`` — the fused chain
+        route. The matpow/expm entry points recognize these and hoist
+        padding to the chain boundary via :func:`chain_for`; as a bare
+        (a, b) callable this behaves like the matching per-call kernel.
     """
     if backend == "xla":
         def mm(a, b):
@@ -54,7 +70,27 @@ def matmul_backend(backend: str = "xla", precision=None) -> Callable:
     if backend in ("pallas", "pallas_interpret"):
         from repro.kernels import ops as kops
         return functools.partial(kops.matmul, interpret=(backend == "pallas_interpret"))
+    if backend in _CHAIN_BACKENDS:
+        from repro.kernels import ops as kops
+        return functools.partial(kops.matmul, interpret=_CHAIN_BACKENDS[backend])
     raise ValueError(f"unknown matmul backend: {backend!r}")
+
+
+def chain_for(a: jax.Array, backend: str, donate: bool = True):
+    """A ``MatmulChain`` for ``a``'s shape when ``backend`` requests the
+    fused route, else None (callers fall back to the per-multiply path).
+
+    Pass ``donate=False`` when every squaring runs inside lax control flow
+    (fori/while loops): donation only fires on eager calls, and a
+    donate-enabled chain pays a defensive pad-time copy to protect the
+    caller's buffer that traced-only chains do not need.
+    """
+    if backend not in _CHAIN_BACKENDS:
+        return None
+    from repro.kernels import ops as kops
+    return kops.MatmulChain(a.shape[-1], a.dtype,
+                            interpret=_CHAIN_BACKENDS[backend],
+                            donate=donate)
 
 
 def _accum_dtype(dtype) -> jnp.dtype:
@@ -90,6 +126,11 @@ def matpow_naive(a: jax.Array, n: int, *, backend: str = "xla") -> jax.Array:
     _check_square(a)
     if n == 0:
         return _eye_like(a)
+    chain = chain_for(a, backend, donate=False)  # multiplies are all traced
+    if chain is not None:
+        ap = chain.pad(a)
+        out = lax.fori_loop(0, n - 1, lambda _, acc: chain.mm(acc, ap), ap)
+        return chain.unpad(out)
     mm = matmul_backend(backend)
     # lax.fori_loop keeps HLO O(1) in n, matching "launch the kernel N times".
     return lax.fori_loop(0, n - 1, lambda _, acc: mm(acc, a), a)
@@ -110,6 +151,11 @@ def matpow_binary(a: jax.Array, n: int, *, backend: str = "xla") -> jax.Array:
     _check_square(a)
     if n == 0:
         return _eye_like(a)
+    chain = chain_for(a, backend)
+    if chain is not None:
+        # chain.pad guarantees the returned buffer is the chain's own (copy
+        # on identity-pad), so donated squarings never touch the caller's.
+        return chain.unpad(_binary_chain_body(chain.pad(a), n, chain))
     mm = matmul_backend(backend)
     result = None
     base = a
@@ -123,17 +169,60 @@ def matpow_binary(a: jax.Array, n: int, *, backend: str = "xla") -> jax.Array:
     return result
 
 
+def _binary_chain_body(base: jax.Array, n: int, chain) -> jax.Array:
+    """Squaring/combine loop on the padded buffer. ``chain.square`` donates
+    its input, so when ``result`` first aliases ``base`` (and squarings
+    remain) it takes a cheap O(n^2) copy instead of sharing the buffer."""
+    result = None
+    while True:
+        if n & 1:
+            if result is None:
+                result = base if n == 1 else jnp.copy(base)
+            else:
+                result = chain.mm(result, base)
+        n >>= 1
+        if n == 0:
+            return result
+        base = chain.square(base)
+
+
 def matpow_binary_traced(a: jax.Array, n: jax.Array, *, backend: str = "xla",
                          max_bits: int = 32) -> jax.Array:
     """A^n with a *traced* integer n — one compiled program for every power.
 
-    Uses a ``lax.while_loop`` over the binary digits of ``n``; identical math
-    to :func:`matpow_binary`. ``max_bits`` only bounds loop trip count checks
-    (the loop exits as soon as n reaches 0).
+    Uses ``lax.while_loop``s over the binary digits of ``n``; identical math
+    to :func:`matpow_binary`. The result is seeded from the FIRST set bit
+    (squaring past any trailing zeros first) rather than from the identity,
+    so no call pays the identity @ base combine: exactly bit_length(n)-1
+    squarings + popcount(n)-1 combines. ``max_bits`` only bounds loop trip
+    count checks (the loops exit as soon as n reaches 0).
     """
     _check_square(a)
-    mm = matmul_backend(backend)
-    n = jnp.asarray(n, dtype=jnp.int32)
+    # Squarings run inside while_loops (always traced) — donation never fires.
+    chain = chain_for(a, backend, donate=False)
+    if chain is not None:
+        mm, square = chain.mm, chain.square
+        ap = chain.pad(a)
+    else:
+        mm = matmul_backend(backend)
+        square = lambda x: mm(x, x)
+        ap = a
+    # Clamp negative n to 0 (-> identity): the static siblings raise for
+    # n < 0, but a traced value can't, and falling through the loops would
+    # silently return A^1.
+    n = jnp.maximum(jnp.asarray(n, dtype=jnp.int32), 0)
+
+    # Phase 1: square through the trailing zero bits of n.
+    def strip_cond(state):
+        k, _ = state
+        return jnp.logical_and(k > 0, (k & 1) == 0)
+
+    def strip_body(state):
+        k, base = state
+        return (k >> 1, square(base))
+
+    k, base = lax.while_loop(strip_cond, strip_body, (n, ap))
+    # base now holds the first set bit's power A^(2^t) — the result seed.
 
     def cond(state):
         k, _, _ = state
@@ -141,11 +230,10 @@ def matpow_binary_traced(a: jax.Array, n: jax.Array, *, backend: str = "xla",
 
     def body(state):
         k, base, result = state
+        base = square(base)
         result = lax.cond(k & 1, lambda: mm(result, base), lambda: result)
-        # Guard the final squaring: when k becomes 0 the square is unused but
-        # would still burn a matmul; skip it.
-        base = lax.cond(k > 1, lambda: mm(base, base), lambda: base)
         return (k >> 1, base, result)
 
-    _, _, result = lax.while_loop(cond, body, (n, a, _eye_like(a)))
-    return result
+    _, _, result = lax.while_loop(cond, body, (k >> 1, base, base))
+    result = jnp.where(n == 0, _eye_like(ap), result)
+    return chain.unpad(result) if chain is not None else result

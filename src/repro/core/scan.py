@@ -21,6 +21,8 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
+from repro.core.matpow import _accum_dtype
+
 __all__ = ["prefix_scan", "prefix_products", "decay_prefix"]
 
 
@@ -65,15 +67,21 @@ def prefix_products(mats: jax.Array, *, axis: int = 0, reverse: bool = False) ->
     """
     if mats.shape[-1] != mats.shape[-2]:
         raise ValueError(f"prefix_products needs square matrices, got {mats.shape}")
+    # Accumulate sub-fp32 chains (bf16/f16) at fp32 and cast back — a 500k-step
+    # bf16 chain accumulated in bf16 loses ~3 decimal digits per doubling
+    # level; this matches matmul_backend's accumulation contract.
+    acc = _accum_dtype(mats.dtype)
 
     def combine(older, newer):
         # newer @ older: the later matrix applies after (left of) the earlier.
-        return jnp.matmul(newer, older, preferred_element_type=mats.dtype)
+        return jnp.matmul(newer, older,
+                          preferred_element_type=acc).astype(mats.dtype)
 
     if reverse:
         flipped = jnp.flip(mats, axis=axis)
         def combine_r(older, newer):
-            return jnp.matmul(older, newer, preferred_element_type=mats.dtype)
+            return jnp.matmul(older, newer,
+                              preferred_element_type=acc).astype(mats.dtype)
         return jnp.flip(prefix_scan(flipped, combine_r, axis=axis), axis=axis)
     return prefix_scan(mats, combine, axis=axis)
 

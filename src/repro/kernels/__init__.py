@@ -1,12 +1,17 @@
 """repro.kernels — Pallas TPU kernels for the compute hot-spots.
 
-matmul.py    : the paper's tiled matmul kernel, adapted to MXU/VMEM.
+matmul.py    : the paper's tiled matmul kernel + the single-ref squaring
+               kernel, adapted to MXU/VMEM.
 attention.py : flash attention (causal + sliding window) for 32k prefill.
-ops.py       : jit'd public wrappers (padding, batching, backend dispatch).
+ops.py       : jit'd public wrappers (padding, batching, backend dispatch)
+               and the fused chain executor (MatmulChain).
+autotune.py  : persistent tile-size autotuner (the paper's measured sweep,
+               cached on disk and consulted by ops.pick_blocks).
 ref.py       : pure-jnp oracles every kernel is swept against.
 """
 
-from repro.kernels import ops, ref
-from repro.kernels.ops import matmul, attention
+from repro.kernels import autotune, ops, ref
+from repro.kernels.ops import MatmulChain, attention, matmul, square
 
-__all__ = ["ops", "ref", "matmul", "attention"]
+__all__ = ["autotune", "ops", "ref", "matmul", "square", "attention",
+           "MatmulChain"]

@@ -1,0 +1,242 @@
+"""Persistent tile-size autotuner for the Pallas matmul kernels.
+
+The 2012 paper sweeps tile sizes per problem ("an appropriate TILE size is
+used based on the problem and local memory available"); D'Alberto's
+heterogeneous matmul work and the QCD-on-GPUs methodology both show a
+*measured* sweep is worth 2-4x over a static heuristic. This module makes
+that sweep a first-class persistent artifact:
+
+  * ``sweep``      — score candidate ``(block_m, block_n, block_k)`` tilings
+                     for a ``(m, n, k, dtype)`` problem: wall-clock on real
+                     TPU hardware, an analytic VMEM/arithmetic-intensity model
+                     everywhere else (interpret-mode wall clock is python
+                     overhead, never timed).
+  * on-disk cache  — ``~/.cache/repro/autotune.json`` (override with
+                     ``REPRO_AUTOTUNE_CACHE``), atomic writes, corrupted or
+                     partially-valid files degrade to an empty/filtered cache
+                     instead of raising.
+  * ``lookup``     — consulted by ``ops.pick_blocks`` before its VMEM
+                     heuristic, so every padded ``ops.matmul`` and every
+                     ``ops.MatmulChain`` picks tuned tiles for free.
+
+``benchmarks/kernel_sweep.py`` populates the cache as part of the paper's
+tile sweep; ``benchmarks/run.py --quick`` seeds it for the benched sizes.
+"""
+
+from __future__ import annotations
+
+import json
+import math
+import os
+import time
+import warnings
+from pathlib import Path
+from typing import Iterable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.matmul import matmul_pallas, DEFAULT_BLOCK
+
+__all__ = [
+    "cache_path", "load_cache", "save_cache", "clear_memory_cache",
+    "lookup", "record", "sweep", "DEFAULT_CANDIDATES",
+    "VMEM_BUDGET", "vmem_footprint",
+]
+
+_ENV_VAR = "REPRO_AUTOTUNE_CACHE"
+
+#: Default VMEM working-set budget shared by ops.pick_blocks and the sweep
+#: scorer — ONE definition so the heuristic and the cache never disagree.
+VMEM_BUDGET = 8 * 1024 * 1024
+
+
+def vmem_footprint(blocks: Sequence[int], itemsize: int = 2) -> int:
+    """Working-set bytes of one grid step: two double-buffered input tiles
+    plus the fp32 accumulator tile (the paper's local-memory constraint)."""
+    bm, bn, bk = blocks
+    return 2 * (bm * bk + bk * bn) * itemsize + bm * bn * 4
+
+# MXU-aligned candidates; power-of-two multiples of 128 so any mix has a
+# small lcm (chain execution needs one padded size divisible by all three).
+DEFAULT_CANDIDATES: tuple = (
+    (128, 128, 128), (256, 256, 256), (512, 512, 512),
+    (512, 512, 256), (256, 512, 512), (128, 512, 512),
+    (512, 128, 512), (256, 256, 512), (512, 256, 512),
+)
+
+# In-memory image of each cache file, keyed by resolved path.
+_MEM: dict = {}
+
+
+def cache_path() -> Path:
+    """Resolve the on-disk cache location (env override wins)."""
+    override = os.environ.get(_ENV_VAR)
+    if override:
+        return Path(override).expanduser()
+    return Path.home() / ".cache" / "repro" / "autotune.json"
+
+
+def _key(m: int, n: int, k: int, dtype=None, backend: Optional[str] = None) -> str:
+    d = jnp.dtype(dtype).name if dtype is not None else "any"
+    b = backend or jax.default_backend()
+    return f"{m}x{n}x{k}/{d}/{b}"
+
+
+def _valid_entry(entry) -> bool:
+    try:
+        blocks = entry["blocks"]
+        return (len(blocks) == 3
+                and all(isinstance(x, int) and x > 0 for x in blocks))
+    except (TypeError, KeyError):
+        return False
+
+
+def load_cache(path: Optional[os.PathLike] = None) -> dict:
+    """Read (and memoize) the cache file; corrupted files degrade to {}."""
+    path = Path(path) if path is not None else cache_path()
+    memo_key = str(path)
+    if memo_key in _MEM:
+        return _MEM[memo_key]
+    data: dict = {}
+    if path.exists():
+        try:
+            raw = json.loads(path.read_text())
+            if not isinstance(raw, dict):
+                raise ValueError("cache root must be a JSON object")
+            data = {k: v for k, v in raw.items() if _valid_entry(v)}
+        except (ValueError, OSError) as exc:
+            warnings.warn(f"ignoring corrupted autotune cache {path}: {exc}")
+            data = {}
+    _MEM[memo_key] = data
+    return data
+
+
+def save_cache(cache: Optional[dict] = None,
+               path: Optional[os.PathLike] = None) -> Path:
+    """Atomically persist the cache (tmp file + rename).
+
+    An unwritable location degrades to a warning — tuning results stay
+    usable in-process; a cache must never take down the workload.
+    """
+    path = Path(path) if path is not None else cache_path()
+    if cache is None:
+        cache = _MEM.get(str(path), {})
+    _MEM[str(path)] = cache
+    try:
+        path.parent.mkdir(parents=True, exist_ok=True)
+        tmp = path.with_name(path.name + ".tmp")
+        tmp.write_text(json.dumps(cache, indent=2, sort_keys=True))
+        os.replace(tmp, path)
+    except OSError as exc:
+        warnings.warn(f"could not persist autotune cache to {path}: {exc}")
+    return path
+
+
+def clear_memory_cache() -> None:
+    """Drop the in-process memo (tests; picks up external file edits)."""
+    _MEM.clear()
+
+
+def lookup(m: int, n: int, k: int, dtype=None,
+           backend: Optional[str] = None) -> Optional[tuple]:
+    """Tuned (block_m, block_n, block_k) for the problem key, or None."""
+    cache = load_cache()
+    for key in (_key(m, n, k, dtype, backend), _key(m, n, k, None, backend)):
+        entry = cache.get(key)
+        if entry is not None and _valid_entry(entry):
+            return tuple(entry["blocks"])
+    return None
+
+
+def record(m: int, n: int, k: int, blocks: Sequence[int], dtype=None,
+           backend: Optional[str] = None, score: Optional[float] = None,
+           measured: bool = False, save: bool = True) -> None:
+    """Store the winning tiling for a problem key (and persist by default)."""
+    cache = load_cache()
+    cache[_key(m, n, k, dtype, backend)] = {
+        "blocks": [int(x) for x in blocks],
+        "score": None if score is None else float(score),
+        "measured": bool(measured),
+    }
+    if save:
+        save_cache(cache)
+
+
+def _round_up(x: int, mult: int) -> int:
+    return (x + mult - 1) // mult * mult
+
+
+def modeled_score(m: int, n: int, k: int, blocks: Sequence[int], dtype,
+                  vmem_budget_bytes: int = VMEM_BUDGET) -> float:
+    """Analytic cost proxy (lower is better) when we cannot time real runs.
+
+    Penalizes tilings whose working set busts VMEM, then ranks by padding
+    waste over arithmetic intensity — the two quantities the paper's local-
+    memory sweep was implicitly optimizing.
+    """
+    bm, bn, bk = blocks
+    itemsize = jnp.dtype(dtype).itemsize
+    if vmem_footprint(blocks, itemsize) > vmem_budget_bytes:
+        return float("inf")
+    flops = 2 * bm * bn * bk
+    move = (bm * bk + bk * bn) * itemsize + bm * bn * 4
+    intensity = flops / move
+    waste = (_round_up(m, bm) * _round_up(n, bn) * _round_up(k, bk)) / (m * n * k)
+    return waste / intensity
+
+
+def measure_us(m: int, n: int, k: int, blocks: Sequence[int], dtype,
+               reps: int = 3, warmup: int = 1) -> float:
+    """Wall-clock min-of-reps for one tiling (real compiled kernel only)."""
+    bm, bn, bk = blocks
+    mp, np_, kp = _round_up(m, bm), _round_up(n, bn), _round_up(k, bk)
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.standard_normal((mp, kp)), dtype)
+    b = jnp.asarray(rng.standard_normal((kp, np_)), dtype)
+    fn = lambda: matmul_pallas(a, b, block_m=bm, block_n=bn, block_k=bk)
+    for _ in range(warmup):
+        jax.block_until_ready(fn())
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
+
+
+def sweep(m: int, n: int, k: int, dtype=jnp.float32,
+          candidates: Optional[Iterable[Sequence[int]]] = None, *,
+          backend: Optional[str] = None, measure: Optional[bool] = None,
+          reps: int = 3, save: bool = True):
+    """Score every candidate tiling, record the winner, return (best, results).
+
+    ``measure=None`` auto-selects: wall-clock on a real TPU backend, the
+    analytic model otherwise. ``results`` is a list of dicts (blocks, score,
+    measured) sorted best-first.
+    """
+    candidates = [tuple(int(x) for x in c)
+                  for c in (candidates or DEFAULT_CANDIDATES)]
+    if measure is None:
+        measure = jax.default_backend() == "tpu"
+    results = []
+    for blocks in candidates:
+        if measure:
+            score = measure_us(m, n, k, blocks, dtype, reps=reps)
+        else:
+            score = modeled_score(m, n, k, blocks, dtype)
+        results.append({"blocks": blocks, "score": score, "measured": measure})
+    results.sort(key=lambda r: r["score"])
+    best = results[0]
+    if not math.isfinite(best["score"]):
+        # Every candidate busts VMEM — fall back to the smallest-footprint
+        # tiling (NOT lexicographic min, which could pick a huge tile).
+        itemsize = jnp.dtype(dtype).itemsize
+        best = {"blocks": min(candidates,
+                              key=lambda c: vmem_footprint(c, itemsize)),
+                "score": None, "measured": False}
+    if save:
+        record(m, n, k, best["blocks"], dtype=dtype, backend=backend,
+               score=best["score"], measured=bool(measure))
+    return tuple(best["blocks"]), results

@@ -1,25 +1,37 @@
 """Public jit'd wrappers around the Pallas kernels.
 
-``matmul``   — arbitrary-shape tiled matmul: pads to block multiples, strips
-               the padding, vmaps over leading batch dims, and picks block
-               shapes that fit VMEM. On non-TPU backends it transparently
-               falls back to the XLA dot (the Pallas TPU pipeline only
-               lowers on TPU; ``interpret=True`` forces the kernel body on
-               CPU for validation — used throughout tests/).
-``attention``— flash attention wrapper with the same dispatch contract.
+``matmul``      — arbitrary-shape tiled matmul: pads to block multiples,
+                  strips the padding, vmaps over leading batch dims, and picks
+                  block shapes that fit VMEM. On non-TPU backends it
+                  transparently falls back to the XLA dot (the Pallas TPU
+                  pipeline only lowers on TPU; ``interpret=True`` forces the
+                  kernel body on CPU for validation — used throughout tests/).
+``square``      — C = A @ A through the single-ref squaring kernel, same
+                  pad/dispatch contract as ``matmul``.
+``MatmulChain`` — fused chain executor for repeated-multiply workloads
+                  (matpow, expm): pads ONCE at entry, runs every multiply /
+                  squaring on the block-divisible padded buffer (no per-call
+                  pad/unpad/block-pick), un-pads once at exit, and donates the
+                  squaring input so eager chains reuse HBM buffers in place.
+``attention``   — flash attention wrapper with the same dispatch contract.
+``pick_blocks`` — tile selection: persistent autotune cache first
+                  (``repro.kernels.autotune``), VMEM heuristic fallback.
 """
 
 from __future__ import annotations
 
 import functools
+import math
 
 import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref as _ref
-from repro.kernels.matmul import matmul_pallas, DEFAULT_BLOCK
+from repro.kernels.matmul import (matmul_pallas, square_pallas, DEFAULT_BLOCK,
+                                  SQUARE_VMEM_LIMIT)
 
-__all__ = ["matmul", "attention", "pick_blocks", "pallas_supported"]
+__all__ = ["matmul", "square", "attention", "pick_blocks", "pad_to_blocks",
+           "MatmulChain", "pallas_supported"]
 
 
 def pallas_supported() -> bool:
@@ -32,20 +44,40 @@ def _round_up(x: int, m: int) -> int:
 
 
 def pick_blocks(m: int, n: int, k: int,
-                vmem_budget_bytes: int = 8 * 1024 * 1024):
-    """Choose (block_m, block_n, block_k): largest 128-multiples <= the dim
-    (capped at the defaults) whose working set fits the VMEM budget.
+                vmem_budget_bytes=None,
+                dtype=None, use_cache: bool = True):
+    """Choose (block_m, block_n, block_k) for an (m, k) x (k, n) problem.
 
-    This is the paper's tile-size selection ("an appropriate TILE size is
-    used based on the problem and local memory available") with 16 KB of
-    OpenCL local memory replaced by the VMEM budget.
+    Consults the persistent autotune cache first (the paper's measured tile
+    sweep, see ``repro.kernels.autotune``); on a miss falls back to the
+    static heuristic: largest 128-multiples <= the dim (capped at the
+    defaults) whose working set fits the VMEM budget — the paper's "an
+    appropriate TILE size is used based on the problem and local memory
+    available" with 16 KB of OpenCL local memory replaced by VMEM. Both the
+    budget and the footprint model are shared with the autotuner's scorer.
     """
+    from repro.kernels import autotune
+    if vmem_budget_bytes is None:
+        vmem_budget_bytes = autotune.VMEM_BUDGET
+    if use_cache:
+        tuned = autotune.lookup(m, n, k, dtype=dtype)
+        # A cache entry must still satisfy the kernel's hard invariants: MXU
+        # 128-alignment and a working set that can exist in VMEM at all. The
+        # footprint bound is 2x the modeled budget — measured-on-TPU winners
+        # may legitimately exceed the conservative model, but a stale or
+        # hand-edited entry that cannot compile must fall to the heuristic.
+        itemsize = jnp.dtype(dtype).itemsize if dtype is not None else 2
+        if tuned is not None and all(x % 128 == 0 for x in tuned) \
+                and autotune.vmem_footprint(tuned, itemsize=itemsize) \
+                <= 2 * vmem_budget_bytes:
+            return tuned
+
     bm = min(DEFAULT_BLOCK[0], _round_up(m, 128))
     bn = min(DEFAULT_BLOCK[1], _round_up(n, 128))
     bk = min(DEFAULT_BLOCK[2], _round_up(k, 128))
 
     def footprint(bm, bn, bk):  # bf16 in, f32 acc, x2 double buffering on in
-        return 2 * (bm * bk + bk * bn) * 2 + bm * bn * 4
+        return autotune.vmem_footprint((bm, bn, bk), itemsize=2)
 
     # Shrink K first (accumulator unaffected), then N, then M.
     while footprint(bm, bn, bk) > vmem_budget_bytes and bk > 128:
@@ -55,6 +87,41 @@ def pick_blocks(m: int, n: int, k: int,
     while footprint(bm, bn, bk) > vmem_budget_bytes and bm > 128:
         bm //= 2
     return bm, bn, bk
+
+
+def _square_blocks(n: int, dtype, blocks=None):
+    """(blocks, padded_n) for an (n, n) squaring-chain problem.
+
+    The padded size must divide by all three block dims (the output of one
+    multiply feeds the next, so M = N = K). A pathological mixed tiling from
+    the CACHE (e.g. 384s + 512s -> lcm 1536) would blow the padding up, so
+    cache-sourced tiles fall back to the uncached heuristic in that case.
+    Explicitly supplied ``blocks`` are always honored — a caller asking for
+    a specific tiling (benchmarks, tests) must get that tiling.
+    """
+    if blocks is not None:
+        bm, bn, bk = blocks
+        return (bm, bn, bk), _round_up(n, math.lcm(bm, bn, bk))
+    bm, bn, bk = pick_blocks(n, n, n, dtype=dtype)
+    step = math.lcm(bm, bn, bk)
+    if step > 2 * _round_up(n, 128):
+        bm, bn, bk = pick_blocks(n, n, n, dtype=dtype, use_cache=False)
+        step = math.lcm(bm, bn, bk)
+    return (bm, bn, bk), _round_up(n, step)
+
+
+def pad_to_blocks(a: jax.Array, block_m: int, block_n: int) -> jax.Array:
+    """Zero-pad the trailing two dims of ``a`` up to block multiples.
+
+    No-op (returns ``a`` unchanged) when already divisible. The chain
+    executor calls this exactly once per chain; ``matmul`` once per operand.
+    """
+    m, n = a.shape[-2], a.shape[-1]
+    mp, np_ = _round_up(m, block_m), _round_up(n, block_n)
+    if (mp, np_) == (m, n):
+        return a
+    pad = [(0, 0)] * (a.ndim - 2) + [(0, mp - m), (0, np_ - n)]
+    return jnp.pad(a, pad)
 
 
 def matmul(a: jax.Array, b: jax.Array, *, interpret: bool = False,
@@ -87,19 +154,148 @@ def matmul(a: jax.Array, b: jax.Array, *, interpret: bool = False,
 
     m, k = a.shape
     k2, n = b.shape
-    bm, bn, bk = blocks or pick_blocks(m, n, k)
+    bm, bn, bk = blocks or pick_blocks(m, n, k, dtype=a.dtype)
 
-    mp, np_, kp = _round_up(m, bm), _round_up(n, bn), _round_up(k, bk)
-    if (mp, kp) != (m, k):
-        a = jnp.pad(a, ((0, mp - m), (0, kp - k)))
-    if (kp, np_) != (k2, n):
-        b = jnp.pad(b, ((0, kp - k2), (0, np_ - n)))
+    a = pad_to_blocks(a, bm, bk)
+    b = pad_to_blocks(b, bk, bn)
 
     out = matmul_pallas(a, b, block_m=bm, block_n=bn, block_k=bk,
                         interpret=interpret, out_dtype=out_dtype)
-    if (mp, np_) != (m, n):
+    if out.shape != (m, n):
         out = out[:m, :n]
     return out
+
+
+def square(a: jax.Array, *, interpret: bool = False, blocks=None,
+           out_dtype=None) -> jax.Array:
+    """C = A @ A via the single-ref squaring kernel; arbitrary square shapes."""
+    out_dtype = out_dtype or a.dtype
+    if not (interpret or pallas_supported()):
+        return _ref.matmul_ref(a, a, out_dtype=out_dtype)
+    if a.ndim > 2:
+        return jax.vmap(lambda x: square(
+            x, interpret=interpret, blocks=blocks, out_dtype=out_dtype))(a)
+    n = a.shape[-1]
+    (bm, bn, bk), padded_n = _square_blocks(n, a.dtype, blocks)
+    padded = pad_to_blocks(a, padded_n, padded_n)
+    out = square_pallas(padded, block_m=bm, block_n=bn, block_k=bk,
+                        interpret=interpret, out_dtype=out_dtype)
+    if out.shape != a.shape:
+        out = out[:n, :n]
+    return out
+
+
+# Donated squaring steps: called eagerly (one dispatch per squaring in a
+# python-level chain), XLA reuses the operand's HBM buffer for the output.
+# Inside an outer trace (fori/while loops, user jit) donation is inert and
+# XLA's own buffer reuse applies. Callers must treat the argument as
+# consumed — see MatmulChain.square.
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_m", "block_n", "block_k", "interpret", "out_dtype"),
+    donate_argnums=(0,),
+)
+def _square_step(a, *, block_m, block_n, block_k, interpret, out_dtype):
+    return square_pallas(a, block_m=block_m, block_n=block_n, block_k=block_k,
+                         interpret=interpret, out_dtype=out_dtype)
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _square_step_ref(a):
+    return _ref.matmul_ref(a, a)
+
+
+class MatmulChain:
+    """Fused executor for a chain of same-shape square multiplies.
+
+    The seed implementation paid ``ops.matmul``'s full entry cost on every
+    multiply of a squaring chain: re-pick blocks, re-pad both operands,
+    re-strip the padding, re-dispatch vmap. A chain of k multiplies on one
+    (n, n) operand needs exactly ONE pad and ONE un-pad — zero-padding is
+    closed under multiplication ([[A,0],[0,0]]^2 = [[A^2,0],[0,0]]) — so this
+    object hoists all of that to the chain boundary:
+
+        chain = MatmulChain(a.shape[-1], a.dtype, interpret=...)
+        x = chain.pad(a)            # once
+        x = chain.square(x)         # k times, block-divisible fast path,
+        ...                         #   donated buffers, single-ref kernel
+        out = chain.unpad(result)   # once
+
+    Off-TPU without ``interpret`` the Pallas pipeline cannot lower, so the
+    chain degrades to the XLA dot with NO padding at all (``pad``/``unpad``
+    are identity) — strictly no worse than the seed path there either.
+
+    ``square(x)`` may donate ``x``'s buffer when called eagerly: treat the
+    argument as consumed (copy first if you hold another reference to it).
+    """
+
+    def __init__(self, n: int, dtype, *, interpret: bool = False,
+                 blocks=None, donate: bool = True):
+        self.n = int(n)
+        self.dtype = jnp.dtype(dtype)
+        self.interpret = bool(interpret)
+        self.donate = bool(donate)
+        self.active = self.interpret or pallas_supported()
+        if self.active:
+            self.blocks, self.padded_n = _square_blocks(self.n, self.dtype,
+                                                        blocks)
+        else:
+            self.blocks = None
+            self.padded_n = self.n
+
+    # -- chain boundary ----------------------------------------------------
+    def pad(self, a: jax.Array) -> jax.Array:
+        """Zero-pad (..., n, n) -> (..., P, P). Called once per chain.
+
+        When padding is a no-op (already block-divisible, or inactive chain)
+        and donation is on, an EAGER caller gets a copy instead of its own
+        array back: ``square`` consumes its operand, and the chain must never
+        consume the caller's buffer. Under a trace the copy is elided by XLA.
+        """
+        if self.active and self.padded_n != self.n:
+            return pad_to_blocks(a, self.padded_n, self.padded_n)
+        if self.donate and not isinstance(a, jax.core.Tracer):
+            return jnp.copy(a)
+        return a
+
+    def unpad(self, c: jax.Array) -> jax.Array:
+        """Strip back to (..., n, n). Called once per chain."""
+        if not self.active or self.padded_n == self.n:
+            return c
+        return c[..., : self.n, : self.n]
+
+    # -- chain body (operands already padded) ------------------------------
+    def mm(self, x: jax.Array, y: jax.Array) -> jax.Array:
+        """x @ y on padded buffers — no pad/unpad, blocks fixed per chain."""
+        if not self.active:
+            return _ref.matmul_ref(x, y, out_dtype=self.dtype)
+        if x.ndim > 2 or y.ndim > 2:
+            return jax.vmap(self.mm)(x, y)
+        bm, bn, bk = self.blocks
+        return matmul_pallas(x, y, block_m=bm, block_n=bn, block_k=bk,
+                             interpret=self.interpret, out_dtype=self.dtype)
+
+    def square(self, x: jax.Array) -> jax.Array:
+        """x @ x via the single-ref kernel; CONSUMES x (buffer donation).
+
+        The donated jit step only wraps EAGER calls — that is where donation
+        frees the operand's HBM buffer for the output. Under an outer trace
+        donation is inert and the extra pjit boundary would only block XLA
+        fusion/inlining, so traced calls go straight to the kernel.
+        """
+        eager = not isinstance(x, jax.core.Tracer)
+        if not self.active:
+            if self.donate and eager:
+                return _square_step_ref(x)
+            return _ref.matmul_ref(x, x, out_dtype=self.dtype)
+        if x.ndim > 2:
+            return jax.vmap(self.square)(x)
+        bm, bn, bk = self.blocks
+        if self.donate and eager:
+            return _square_step(x, block_m=bm, block_n=bn, block_k=bk,
+                                interpret=self.interpret, out_dtype=self.dtype)
+        return square_pallas(x, block_m=bm, block_n=bn, block_k=bk,
+                             interpret=self.interpret, out_dtype=self.dtype)
 
 
 def attention(q, k, v, *, causal: bool = True, window=None, scale=None,

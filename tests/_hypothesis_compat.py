@@ -1,0 +1,76 @@
+"""Optional-``hypothesis`` shim for the property-based tests.
+
+The real library is an optional dev dependency (``pip install -e .[dev]``,
+see pyproject.toml). When it is absent the tests must still run, so this
+module re-exports the real ``given``/``settings``/``strategies`` when
+available and otherwise substitutes a deterministic fallback that runs each
+property on a fixed set of examples: the all-min corner, the all-max corner,
+and a handful of seeded random draws. Far weaker than hypothesis (no
+shrinking, no example database) but it keeps every algebraic property
+exercised at its boundary and interior points.
+"""
+
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies
+    HAVE_HYPOTHESIS = True
+except ImportError:  # deterministic fallback
+    HAVE_HYPOTHESIS = False
+
+    import functools
+    import inspect
+    import zlib
+
+    import numpy as _np
+
+    _N_RANDOM_EXAMPLES = 5
+
+    class _IntegersStrategy:
+        def __init__(self, min_value: int, max_value: int):
+            if min_value > max_value:
+                raise ValueError("min_value > max_value")
+            self.min_value = int(min_value)
+            self.max_value = int(max_value)
+
+        def sample(self, rng) -> int:
+            return int(rng.integers(self.min_value, self.max_value + 1))
+
+    class _Strategies:
+        """The tiny subset of ``hypothesis.strategies`` the tests use."""
+
+        @staticmethod
+        def integers(min_value: int, max_value: int) -> _IntegersStrategy:
+            return _IntegersStrategy(min_value, max_value)
+
+    strategies = _Strategies()
+
+    def settings(*_args, **_kwargs):
+        """Accepted and ignored (max_examples/deadline have no meaning here)."""
+        def decorate(fn):
+            return fn
+        return decorate
+
+    def given(*strats):
+        def decorate(fn):
+            # Stable per-test seed (hash() is salted per process; crc32 is not).
+            seed = zlib.crc32(fn.__qualname__.encode())
+
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                rng = _np.random.default_rng(seed)
+                cases = [tuple(s.min_value for s in strats),
+                         tuple(s.max_value for s in strats)]
+                cases += [tuple(s.sample(rng) for s in strats)
+                          for _ in range(_N_RANDOM_EXAMPLES)]
+                for case in cases:
+                    fn(*args, *case, **kwargs)
+
+            # Hide the strategy-filled parameters from pytest's fixture
+            # resolution (wraps exposes the original signature otherwise).
+            sig = inspect.signature(fn)
+            params = list(sig.parameters.values())
+            wrapper.__signature__ = sig.replace(
+                parameters=params[:len(params) - len(strats)])
+            return wrapper
+        return decorate

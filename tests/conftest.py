@@ -1,9 +1,22 @@
+import atexit
 import os
+import shutil
+import tempfile
 
 # Smoke tests and benches must see exactly ONE device (assignment: the
 # 512-device override belongs to launch/dryrun.py only). Subprocess-based
 # distributed tests set XLA_FLAGS in their own child environments.
 os.environ.pop("XLA_FLAGS", None)
+
+# Isolate the tile-autotuner cache: tests must neither read a developer's
+# tuned entries (block-picker assertions would become machine-dependent) nor
+# pollute ~/.cache/repro — unconditionally, even if the developer has
+# REPRO_AUTOTUNE_CACHE exported. Tests that exercise the cache itself
+# override this per-test with monkeypatch.setenv.
+_autotune_tmp = tempfile.mkdtemp(prefix="repro-autotune-test-")
+atexit.register(shutil.rmtree, _autotune_tmp, ignore_errors=True)
+os.environ["REPRO_AUTOTUNE_CACHE"] = os.path.join(_autotune_tmp,
+                                                  "autotune.json")
 
 import sys
 from pathlib import Path

@@ -1,0 +1,131 @@
+"""Persistent tile autotuner: cache round-trip, corruption recovery,
+pick_blocks integration, sweep scoring."""
+
+import json
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.kernels import autotune, ops
+
+
+@pytest.fixture
+def tmp_cache(tmp_path, monkeypatch):
+    path = tmp_path / "autotune.json"
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(path))
+    autotune.clear_memory_cache()
+    yield path
+    autotune.clear_memory_cache()
+
+
+class TestCacheRoundTrip:
+    def test_record_then_lookup(self, tmp_cache):
+        autotune.record(512, 512, 512, (256, 256, 128), dtype=jnp.float32)
+        assert autotune.lookup(512, 512, 512,
+                               dtype=jnp.float32) == (256, 256, 128)
+
+    def test_survives_reload_from_disk(self, tmp_cache):
+        autotune.record(384, 384, 384, (128, 128, 128), dtype=jnp.bfloat16)
+        autotune.clear_memory_cache()  # force the next lookup to re-read disk
+        assert autotune.lookup(384, 384, 384,
+                               dtype=jnp.bfloat16) == (128, 128, 128)
+        on_disk = json.loads(tmp_cache.read_text())
+        (entry,) = on_disk.values()
+        assert entry["blocks"] == [128, 128, 128]
+
+    def test_miss_returns_none(self, tmp_cache):
+        assert autotune.lookup(640, 640, 640, dtype=jnp.float32) is None
+
+    def test_dtype_keys_are_distinct(self, tmp_cache):
+        autotune.record(512, 512, 512, (128, 128, 128), dtype=jnp.float32)
+        assert autotune.lookup(512, 512, 512, dtype=jnp.bfloat16) is None
+
+    def test_dtype_agnostic_entry_is_fallback(self, tmp_cache):
+        autotune.record(512, 512, 512, (256, 256, 256), dtype=None)
+        assert autotune.lookup(512, 512, 512,
+                               dtype=jnp.float32) == (256, 256, 256)
+
+
+class TestCorruptionRecovery:
+    def test_corrupted_file_degrades_to_empty(self, tmp_cache):
+        tmp_cache.write_text("{this is not json")
+        with pytest.warns(UserWarning, match="corrupted autotune cache"):
+            assert autotune.lookup(512, 512, 512, dtype=jnp.float32) is None
+
+    def test_record_repairs_corrupted_file(self, tmp_cache):
+        tmp_cache.write_text("[1, 2, 3]")  # valid JSON, wrong root type
+        with pytest.warns(UserWarning, match="corrupted autotune cache"):
+            autotune.record(512, 512, 512, (128, 128, 128),
+                            dtype=jnp.float32)
+        autotune.clear_memory_cache()
+        assert autotune.lookup(512, 512, 512,
+                               dtype=jnp.float32) == (128, 128, 128)
+        assert isinstance(json.loads(tmp_cache.read_text()), dict)
+
+    def test_invalid_entries_filtered(self, tmp_cache):
+        tmp_cache.write_text(json.dumps({
+            "512x512x512/float32/cpu": {"blocks": "nope"},
+            "256x256x256/float32/cpu": {"blocks": [128, 128, 128],
+                                        "score": None, "measured": False},
+        }))
+        assert autotune.lookup(512, 512, 512, dtype=jnp.float32) is None
+        assert autotune.lookup(256, 256, 256,
+                               dtype=jnp.float32) == (128, 128, 128)
+
+
+class TestPickBlocksIntegration:
+    def test_pick_blocks_consults_cache(self, tmp_cache):
+        autotune.record(777, 777, 777, (128, 256, 128), dtype=jnp.float32)
+        assert ops.pick_blocks(777, 777, 777,
+                               dtype=jnp.float32) == (128, 256, 128)
+
+    def test_pick_blocks_heuristic_on_miss(self, tmp_cache):
+        bm, bn, bk = ops.pick_blocks(4096, 4096, 4096)
+        assert bm % 128 == 0 and bn % 128 == 0 and bk % 128 == 0
+        footprint = 2 * (bm * bk + bk * bn) * 2 + bm * bn * 4
+        assert footprint <= 8 * 1024 * 1024
+
+    def test_pick_blocks_cache_opt_out(self, tmp_cache):
+        autotune.record(512, 512, 512, (128, 128, 128), dtype=jnp.float32)
+        tuned = ops.pick_blocks(512, 512, 512, dtype=jnp.float32)
+        heuristic = ops.pick_blocks(512, 512, 512, dtype=jnp.float32,
+                                    use_cache=False)
+        assert tuned == (128, 128, 128)
+        assert heuristic != tuned
+
+
+class TestSweep:
+    def test_sweep_populates_cache(self, tmp_cache):
+        cands = [(128, 128, 128), (256, 256, 256)]
+        best, results = autotune.sweep(256, 256, 256, dtype=jnp.float32,
+                                       candidates=cands)
+        assert best in cands
+        assert len(results) == len(cands)
+        assert autotune.lookup(256, 256, 256, dtype=jnp.float32) == best
+
+    def test_modeled_sweep_is_deterministic(self, tmp_cache):
+        best1, _ = autotune.sweep(300, 300, 300, dtype=jnp.float32,
+                                  measure=False, save=False)
+        best2, _ = autotune.sweep(300, 300, 300, dtype=jnp.float32,
+                                  measure=False, save=False)
+        assert best1 == best2
+
+    def test_vmem_busting_candidates_rejected(self, tmp_cache):
+        score = autotune.modeled_score(4096, 4096, 4096,
+                                       (2048, 2048, 2048), jnp.float32)
+        assert score == float("inf")
+
+    def test_chain_uses_tuned_blocks(self, tmp_cache):
+        """MatmulChain picks the cached tiling for its whole chain."""
+        autotune.record(200, 200, 200, (256, 256, 256), dtype=jnp.float32)
+        chain = ops.MatmulChain(200, jnp.float32, interpret=True)
+        assert chain.blocks == (256, 256, 256)
+        assert chain.padded_n == 256
+        a = jnp.asarray(
+            np.random.default_rng(0).standard_normal((200, 200)) * 0.05,
+            jnp.float32)
+        from repro.core import matpow_binary
+        got = np.asarray(matpow_binary(a, 5, backend="pallas_chain_interpret"))
+        want = np.linalg.matrix_power(np.asarray(a, np.float64), 5)
+        np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-6)

@@ -16,12 +16,24 @@ import pytest
 
 SRC = str(Path(__file__).resolve().parent.parent / "src")
 
+# jax.sharding.AxisType only exists on newer jax; older versions' make_mesh
+# has no axis_types kwarg and behaves as Auto. Prepended to every child.
+_MESH_COMPAT = """
+import jax
+def _make_mesh(shape, names):
+    try:
+        kinds = (jax.sharding.AxisType.Auto,) * len(names)
+    except AttributeError:
+        return jax.make_mesh(shape, names)
+    return jax.make_mesh(shape, names, axis_types=kinds)
+"""
+
 
 def _run(body: str):
     env = dict(os.environ)
     env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
     env["PYTHONPATH"] = SRC
-    code = textwrap.dedent(body)
+    code = _MESH_COMPAT + textwrap.dedent(body)
     proc = subprocess.run([sys.executable, "-c", code], env=env,
                           capture_output=True, text=True, timeout=600)
     assert proc.returncode == 0, f"child failed:\n{proc.stdout}\n{proc.stderr}"
@@ -33,8 +45,7 @@ def test_cannon_and_gather_match_matmul():
         import numpy as np, jax, jax.numpy as jnp
         from jax.sharding import NamedSharding, PartitionSpec as P
         from repro.core import matmul_2d_gather, matmul_cannon
-        mesh = jax.make_mesh((2,2), ("data","model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        mesh = _make_mesh((2,2), ("data","model"))
         sh = NamedSharding(mesh, P("data","model"))
         a = jax.device_put(jax.random.normal(jax.random.PRNGKey(0), (64,64))*0.2, sh)
         b = jax.device_put(jax.random.normal(jax.random.PRNGKey(1), (64,64))*0.2, sh)
@@ -51,8 +62,7 @@ def test_matpow_sharded_matches_numpy():
         import numpy as np, jax, jax.numpy as jnp
         from jax.sharding import NamedSharding, PartitionSpec as P
         from repro.core import matpow_sharded
-        mesh = jax.make_mesh((2,2), ("data","model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        mesh = _make_mesh((2,2), ("data","model"))
         sh = NamedSharding(mesh, P("data","model"))
         a = jax.device_put(jax.random.normal(jax.random.PRNGKey(0), (64,64))*0.2, sh)
         got = np.asarray(jax.jit(lambda x: matpow_sharded(x, 13, mesh))(a))
@@ -79,8 +89,7 @@ def test_sharded_forward_matches_single_device():
                                   cfg.vocab_size)
         want = unembed(cfg, params, forward(cfg, params, toks)["x"])
 
-        mesh = jax.make_mesh((2,2), ("data","model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        mesh = _make_mesh((2,2), ("data","model"))
         spec = sharding.param_specs(params, cfg, mesh, "train")
         p_sh = jax.device_put(params, sharding.named(mesh, spec))
         sctx = ShardCtx(mesh=mesh, dp=("data",))
@@ -99,8 +108,7 @@ def test_compressed_psum_and_error_feedback():
         from jax.experimental.shard_map import shard_map
         from jax.sharding import PartitionSpec as P
         from repro.parallel.collectives import compressed_psum, ef_compress
-        mesh = jax.make_mesh((4,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = _make_mesh((4,), ("data",))
         x = jax.random.normal(jax.random.PRNGKey(0), (4, 1024))
 
         def f(xs):
@@ -143,16 +151,14 @@ def test_elastic_restore_across_meshes(tmp_path):
 
         cfg = get_config("qwen3-1.7b", smoke=True)
         params = init_params(cfg, jax.random.PRNGKey(0))
-        mesh4 = jax.make_mesh((2,2), ("data","model"),
-                              axis_types=(jax.sharding.AxisType.Auto,)*2)
+        mesh4 = _make_mesh((2,2), ("data","model"))
         spec = sharding.param_specs(params, cfg, mesh4, "train")
         p4 = jax.device_put(params, sharding.named(mesh4, spec))
         ck = Checkpointer(r"{tmp_path}")
         ck.save(1, p4)
 
         # "restart" on a smaller mesh
-        mesh2 = jax.make_mesh((1,2), ("data","model"),
-                              axis_types=(jax.sharding.AxisType.Auto,)*2)
+        mesh2 = _make_mesh((1,2), ("data","model"))
         spec2 = sharding.param_specs(params, cfg, mesh2, "train")
         template = jax.tree.map(
             lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), params)

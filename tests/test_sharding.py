@@ -11,10 +11,17 @@ from repro.parallel import sharding
 from repro.train.optimizer import adamw_init
 
 
+def _abstract_mesh(sizes, names):
+    try:
+        return AbstractMesh(sizes, names)  # newer jax: (axis_sizes, names)
+    except TypeError:
+        return AbstractMesh(tuple(zip(names, sizes)))  # older: (name, size) pairs
+
+
 def _mesh(multi=False):
     if multi:
-        return AbstractMesh((2, 16, 16), ("pod", "data", "model"))
-    return AbstractMesh((16, 16), ("data", "model"))
+        return _abstract_mesh((2, 16, 16), ("pod", "data", "model"))
+    return _abstract_mesh((16, 16), ("data", "model"))
 
 
 def _shapes(arch, **kw):
