@@ -1,19 +1,23 @@
-"""Tile-size sweep for the Pallas matmul kernel — the paper's Section 4.3.7
-("different kernels having different TILES of size 4x4 ... 16x16") mapped to
-MXU block shapes.
+"""Tile-size sweep across every kernel namespace of the tuning subsystem —
+the paper's Section 4.3.7 ("different kernels having different TILES of size
+4x4 ... 16x16") mapped to MXU block shapes, for matmul, flash attention, and
+the tiered squaring kernel.
 
 Wall-clock timing in interpret mode is meaningless (the kernel body runs as
 python on CPU), so each block config reports MODELED metrics derived from
 the BlockSpec structure — exactly the quantities that decide tile choice on
 TPU:
-    vmem_kib            working set (two in tiles double-buffered + acc)
+    vmem_kib            working set (double-buffered in tiles + acc/scratch)
     intensity_flops_b   arithmetic intensity of one grid step
     mxu_aligned         all dims multiples of 128?
-plus a correctness check against ref.matmul_ref at every config.
+plus a correctness check against the ref.py oracle at every config.
 
-The sweep also feeds the persistent autotuner (repro.kernels.autotune): the
-winning tiling is recorded under the problem key so ops.pick_blocks — and
-therefore every ops.matmul / MatmulChain on this problem size — reuses it.
+The sweep feeds all three namespaces of the persistent autotuner
+(repro.kernels.autotune): winning tilings are recorded under their problem
+keys so ops.pick_blocks / ops.pick_attn_blocks — and therefore every
+ops.matmul, MatmulChain, flash_attention, and models.layers.dense on these
+problem sizes — reuse them, and the square_pallas tier thresholds are
+published as the ``square_panel`` entry.
 """
 
 from __future__ import annotations
@@ -23,17 +27,21 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import autotune, ref
-from repro.kernels.matmul import matmul_pallas
+from repro.kernels.matmul import matmul_pallas, square_pallas
 
 M = K = N = 1024
 # One candidate list and one VMEM model for the whole system: the sweep
 # displays, scores, and records exactly what ops.pick_blocks will consume.
 BLOCKS = autotune.DEFAULT_CANDIDATES
 
+# Attention problem swept: a 2k-context prefill slice at d_head 128; the
+# correctness probe below runs each candidate at a small clamped shape.
+ATTN_SQ = ATTN_SKV = 2048
+ATTN_D = 128
+ATTN_BLOCKS = autotune.DEFAULT_ATTN_CANDIDATES
 
-def main(rows=None):
-    own = rows is None
-    rows = [] if own else rows
+
+def _matmul_section(rows):
     rng = np.random.default_rng(0)
     a = jnp.asarray(rng.standard_normal((M, K)), jnp.bfloat16)
     b = jnp.asarray(rng.standard_normal((K, N)), jnp.bfloat16)
@@ -73,6 +81,83 @@ def main(rows=None):
         "derived": (f"best_blocks={'x'.join(map(str, best))};"
                     f"cache={autotune.cache_path()}"),
     })
+
+
+def _attention_section(rows):
+    """Sweep (block_q, block_k): modeled metrics at the 2k-prefill problem,
+    correctness probe per candidate at a small shape (blocks clamped)."""
+    rng = np.random.default_rng(1)
+    sq = skv = 256
+    d = 64
+    q = jnp.asarray(rng.standard_normal((sq, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((skv, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((skv, d)), jnp.float32)
+    want = np.float32(ref.flash_attention_ref(q, k, v, causal=True))
+    from repro.kernels.attention import flash_attention
+
+    for bq, bk in ATTN_BLOCKS:
+        got = flash_attention(q, k, v, causal=True, interpret=True,
+                              block_q=min(bq, sq), block_k=min(bk, skv))
+        rel = (float(np.abs(np.float32(got) - want).max())
+               / float(np.abs(want).max()))
+        vmem = autotune.attn_vmem_footprint(bq, bk, ATTN_D, itemsize=2) / 1024
+        flops = 4 * bq * bk * ATTN_D
+        byts = (bq * ATTN_D + 2 * bk * ATTN_D) * 2
+        rows.append({
+            "name": f"attention_block_{bq}x{bk}",
+            "us_per_call": 0.0,
+            "derived": (f"vmem_kib={vmem:.0f};intensity={flops/byts:.0f};"
+                        f"mxu_aligned={all(x % 128 == 0 for x in (bq, bk))};"
+                        f"rel_err={rel:.1e}"),
+        })
+
+    best, _ = autotune.sweep_attention(ATTN_SQ, ATTN_SKV, ATTN_D,
+                                       dtype=jnp.bfloat16,
+                                       candidates=ATTN_BLOCKS)
+    rows.append({
+        "name": f"autotune_attn_sweep_{ATTN_SQ}x{ATTN_SKV}x{ATTN_D}",
+        "us_per_call": 0.0,
+        "derived": (f"best_blocks={'x'.join(map(str, best))};"
+                    f"cache={autotune.cache_path()}"),
+    })
+
+
+def _square_tier_section(rows):
+    """Publish the square_pallas tier thresholds (timed crossover on TPU,
+    the defaults as a modeled entry elsewhere) and probe each tier's kernel
+    for correctness at a small size."""
+    rng = np.random.default_rng(2)
+    a = jnp.asarray(rng.standard_normal((256, 256)) * 0.1, jnp.float32)
+    want = np.float32(ref.matmul_ref(a, a))
+    # Force each tier at the same operand by moving the thresholds.
+    forced = {"whole": (1 << 30, 1 << 31), "panel": (1, 1 << 30),
+              "two_operand": (1, 1)}
+    for tier, (lo, hi) in forced.items():
+        got = square_pallas(a, block_m=128, block_n=128, block_k=128,
+                            interpret=True, vmem_limit=lo, panel_limit=hi)
+        rel = (float(np.abs(np.float32(got) - want).max())
+               / float(np.abs(want).max()))
+        rows.append({
+            "name": f"square_tier_{tier}",
+            "us_per_call": 0.0,
+            "derived": f"rel_err={rel:.1e}",
+        })
+
+    whole, panel = autotune.sweep_square_tiers(dtype=jnp.float32)
+    rows.append({
+        "name": "autotune_square_tiers",
+        "us_per_call": 0.0,
+        "derived": (f"whole_limit={whole};panel_limit={panel};"
+                    f"cache={autotune.cache_path()}"),
+    })
+
+
+def main(rows=None):
+    own = rows is None
+    rows = [] if own else rows
+    _matmul_section(rows)
+    _attention_section(rows)
+    _square_tier_section(rows)
     if own:
         for r in rows:
             print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")

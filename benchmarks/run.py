@@ -10,11 +10,15 @@ so the perf trajectory is tracked across PRs:
                          naive vs binary exponentiation + TPU projections
   * chain_bench        — the fused chain-execution path (pad once, donated
                          squarings) vs the seed per-multiply ops.matmul path
-  * autotune           — populates / reuses the persistent tile cache
-                         (~/.cache/repro/autotune.json, REPRO_AUTOTUNE_CACHE
-                         to override; delete the file to force a re-sweep)
-  * kernel_sweep       — the paper's tile-size sweep on the Pallas kernel
-                         (also records the winning tiling into the cache)
+  * autotune           — populates / reuses the persistent tuning cache
+                         across all kernel namespaces (matmul, attention,
+                         square_panel tiers) — ~/.cache/repro/autotune.json,
+                         REPRO_AUTOTUNE_CACHE to override; delete the file
+                         to force a re-sweep
+  * kernel_sweep       — the paper's tile-size sweep on the Pallas kernels:
+                         matmul blocks, attention (block_q, block_k), and
+                         the square_pallas memory tiers (records winners
+                         into the cache)
   * distributed_bench  — Cannon vs gather collective matmul (4-dev CPU)
   * roofline_bench     — per (arch x shape x mesh) dominant term from the
                          dry-run artifacts
@@ -93,8 +97,14 @@ def chain_bench(rows, sizes=(256, 512), power=64, reps=60):
         })
 
 
-def autotune_bench(rows, sizes=(256, 512)):
-    """Populate the persistent tile cache (first run) / reuse it (later)."""
+def autotune_bench(rows, sizes=(256, 512), attn=(1024, 1024, 128)):
+    """Populate the persistent tuning cache (first run) / reuse it (later).
+
+    Seeds all three kernel namespaces: matmul tilings for the benched matpow
+    sizes, an attention (block_q, block_k) entry for a 1k-prefill slice, and
+    the square_pallas tier thresholds. Modeled scoring off-TPU is pure
+    python, so this keeps ``--quick`` well inside its 60 s budget.
+    """
     from repro.kernels import autotune
 
     for size in sizes:
@@ -108,6 +118,26 @@ def autotune_bench(rows, sizes=(256, 512)):
             "derived": (f"blocks={'x'.join(map(str, blocks))};"
                         f"cache_hit={hit};path={autotune.cache_path()}"),
         })
+
+    sq, skv, d = attn
+    blocks = autotune.lookup(sq, skv, d, dtype=jnp.float32,
+                             kernel="attention")
+    hit = blocks is not None
+    if not hit:
+        blocks, _ = autotune.sweep_attention(sq, skv, d, dtype=jnp.float32)
+    rows.append({
+        "name": f"autotune_attn_{sq}x{skv}x{d}",
+        "us_per_call": 0.0,
+        "derived": (f"blocks={'x'.join(map(str, blocks))};"
+                    f"cache_hit={hit};path={autotune.cache_path()}"),
+    })
+
+    whole, panel = autotune.square_tiers(dtype=jnp.float32)
+    rows.append({
+        "name": "autotune_square_tiers",
+        "us_per_call": 0.0,
+        "derived": f"whole_limit={whole};panel_limit={panel}",
+    })
 
 
 def main(argv=None) -> None:

@@ -1,17 +1,23 @@
 """repro.kernels — Pallas TPU kernels for the compute hot-spots.
 
-matmul.py    : the paper's tiled matmul kernel + the single-ref squaring
-               kernel, adapted to MXU/VMEM.
+matmul.py    : the paper's tiled matmul kernel + the tiered squaring kernels
+               (whole-operand / panel-resident / two-operand, chosen by the
+               square_tier VMEM policy), adapted to MXU/VMEM.
 attention.py : flash attention (causal + sliding window) for 32k prefill.
-ops.py       : jit'd public wrappers (padding, batching, backend dispatch)
-               and the fused chain executor (MatmulChain).
-autotune.py  : persistent tile-size autotuner (the paper's measured sweep,
-               cached on disk and consulted by ops.pick_blocks).
+ops.py       : jit'd public wrappers (padding, batching, backend dispatch),
+               the fused chain executor (MatmulChain), the dense-layer
+               routing (dense_matmul), and the block pickers
+               (pick_blocks / pick_attn_blocks).
+autotune.py  : the persistent kernel-registry tuning cache (the paper's
+               measured sweep, namespaced per kernel — matmul / attention /
+               square_panel — cached on disk, consulted by the pickers).
+               See docs/autotuning.md.
 ref.py       : pure-jnp oracles every kernel is swept against.
 """
 
 from repro.kernels import autotune, ops, ref
-from repro.kernels.ops import MatmulChain, attention, matmul, square
+from repro.kernels.ops import (MatmulChain, attention, dense_matmul, matmul,
+                               square)
 
 __all__ = ["autotune", "ops", "ref", "matmul", "square", "attention",
-           "MatmulChain"]
+           "dense_matmul", "MatmulChain"]

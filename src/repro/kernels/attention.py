@@ -83,11 +83,45 @@ def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
         o_ref[...] = (acc_ref[...] / safe_l).astype(o_ref.dtype)
 
 
+def flash_attention(q, k, v, *, causal: bool = True, window=None, scale=None,
+                    interpret: bool = False, block_q=None, block_k=None):
+    """Flash attention over one (batch, head) slice. q: (Sq, D), k/v: (Skv, D).
+
+    Tile selection — the attention face of the kernel-wide tuning subsystem:
+
+      * ``block_q``/``block_k`` of ``None`` (the default) consult
+        ``ops.pick_attn_blocks``, which returns a tuned pair from the
+        persistent cache's ``attention`` namespace when one exists (and
+        still satisfies the kernel invariants below), or a divisibility- and
+        VMEM-safe heuristic otherwise. Resolution happens OUTSIDE the jitted
+        kernel so a cache update is picked up on the next call rather than
+        being baked into a stale jit entry.
+      * Explicit ints are honored exactly: each block is clamped to its
+        sequence length, and the clamped block must then divide that length
+        — ``ValueError`` otherwise (the Pallas grid cannot cover a ragged
+        remainder tile; route through ``ops.attention`` padding-free only
+        with divisible shapes).
+
+    VMEM working set per grid step is ``autotune.attn_vmem_footprint(block_q,
+    block_k, d)``: double-buffered q/k/v tiles, the fp32 score tile, and the
+    fp32 running (max, denom, acc) scratch. Blocks should be multiples of
+    128 (MXU lane width) on real TPU hardware.
+    """
+    if block_q is None or block_k is None:
+        from repro.kernels import ops
+        auto_q, auto_k = ops.pick_attn_blocks(q.shape[0], k.shape[0],
+                                              q.shape[1], dtype=q.dtype)
+        block_q = auto_q if block_q is None else block_q
+        block_k = auto_k if block_k is None else block_k
+    return _flash_attention(q, k, v, causal=causal, window=window,
+                            scale=scale, interpret=interpret,
+                            block_q=int(block_q), block_k=int(block_k))
+
+
 @functools.partial(jax.jit, static_argnames=(
     "causal", "window", "scale", "interpret", "block_q", "block_k"))
-def flash_attention(q, k, v, *, causal: bool = True, window=None, scale=None,
-                    interpret: bool = False, block_q: int = 256,
-                    block_k: int = 256):
+def _flash_attention(q, k, v, *, causal, window, scale, interpret, block_q,
+                     block_k):
     sq, d = q.shape
     skv, dk = k.shape
     if dk != d or v.shape != (skv, d):

@@ -1,26 +1,44 @@
-"""Persistent tile-size autotuner for the Pallas matmul kernels.
+"""Persistent tuning subsystem for every Pallas kernel in the package.
 
 The 2012 paper sweeps tile sizes per problem ("an appropriate TILE size is
 used based on the problem and local memory available"); D'Alberto's
 heterogeneous matmul work and the QCD-on-GPUs methodology both show a
-*measured* sweep is worth 2-4x over a static heuristic. This module makes
-that sweep a first-class persistent artifact:
+*measured* sweep is worth 2-4x over a static heuristic. PR 1 built that
+sweep for the matmul kernel; this module generalizes it into a
+kernel-registry: every cache key is namespaced by the kernel it tunes and
+every kernel variant consults the same persistent artifact.
 
-  * ``sweep``      — score candidate ``(block_m, block_n, block_k)`` tilings
-                     for a ``(m, n, k, dtype)`` problem: wall-clock on real
-                     TPU hardware, an analytic VMEM/arithmetic-intensity model
+Namespaces (the ``kernel`` key segment):
+
+  * ``matmul``       — ``(block_m, block_n, block_k)`` tilings for the tiled
+                       matmul / squaring-chain kernels; consulted by
+                       ``ops.pick_blocks`` (and therefore ``ops.matmul``,
+                       ``ops.MatmulChain``, and ``models.layers.dense``).
+  * ``attention``    — ``(block_q, block_k)`` tilings for the flash-attention
+                       kernel, keyed on ``(sq, skv, d)``; consulted by
+                       ``ops.pick_attn_blocks`` / ``flash_attention``.
+  * ``square_panel`` — the VMEM tier thresholds of ``square_pallas``
+                       (whole-operand-resident limit, panel-resident limit);
+                       consulted by ``square_tiers``.
+
+Shared machinery:
+
+  * ``sweep`` / ``sweep_attention``
+                   — score candidates for a problem: wall-clock on real TPU
+                     hardware, an analytic VMEM/arithmetic-intensity model
                      everywhere else (interpret-mode wall clock is python
                      overhead, never timed).
   * on-disk cache  — ``~/.cache/repro/autotune.json`` (override with
                      ``REPRO_AUTOTUNE_CACHE``), atomic writes, corrupted or
                      partially-valid files degrade to an empty/filtered cache
                      instead of raising.
-  * ``lookup``     — consulted by ``ops.pick_blocks`` before its VMEM
-                     heuristic, so every padded ``ops.matmul`` and every
-                     ``ops.MatmulChain`` picks tuned tiles for free.
+  * ``lookup``     — consulted by the ``pick_*`` helpers before their VMEM
+                     heuristics, so every kernel call picks tuned tiles for
+                     free. Pre-namespace (PR 1) matmul keys keep working.
 
-``benchmarks/kernel_sweep.py`` populates the cache as part of the paper's
-tile sweep; ``benchmarks/run.py --quick`` seeds it for the benched sizes.
+``benchmarks/kernel_sweep.py`` populates all three namespaces as part of the
+paper's tile sweep; ``benchmarks/run.py --quick`` seeds the benched sizes.
+See ``docs/autotuning.md`` for the JSON schema and regeneration workflow.
 """
 
 from __future__ import annotations
@@ -37,15 +55,23 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels.matmul import matmul_pallas, DEFAULT_BLOCK
+from repro.kernels.matmul import (matmul_pallas, DEFAULT_BLOCK,
+                                  SQUARE_VMEM_LIMIT, SQUARE_PANEL_LIMIT)
 
 __all__ = [
     "cache_path", "load_cache", "save_cache", "clear_memory_cache",
     "lookup", "record", "sweep", "DEFAULT_CANDIDATES",
     "VMEM_BUDGET", "vmem_footprint",
+    "KERNELS", "DEFAULT_ATTN_CANDIDATES", "attn_vmem_footprint",
+    "modeled_attn_score", "sweep_attention",
+    "DEFAULT_SQUARE_TIERS", "square_tiers", "record_square_tiers",
+    "sweep_square_tiers",
 ]
 
 _ENV_VAR = "REPRO_AUTOTUNE_CACHE"
+
+#: Kernel namespaces the cache knows about (the first segment of every key).
+KERNELS = ("matmul", "attention", "square_panel")
 
 #: Default VMEM working-set budget shared by ops.pick_blocks and the sweep
 #: scorer — ONE definition so the heuristic and the cache never disagree.
@@ -53,10 +79,25 @@ VMEM_BUDGET = 8 * 1024 * 1024
 
 
 def vmem_footprint(blocks: Sequence[int], itemsize: int = 2) -> int:
-    """Working-set bytes of one grid step: two double-buffered input tiles
-    plus the fp32 accumulator tile (the paper's local-memory constraint)."""
+    """Working-set bytes of one matmul grid step: two double-buffered input
+    tiles plus the fp32 accumulator tile (the paper's local-memory
+    constraint)."""
     bm, bn, bk = blocks
     return 2 * (bm * bk + bk * bn) * itemsize + bm * bn * 4
+
+
+def attn_vmem_footprint(block_q: int, block_k: int, d: int,
+                        itemsize: int = 2) -> int:
+    """Working-set bytes of one flash-attention grid step.
+
+    Double-buffered q/k/v input tiles, the fp32 (block_q, block_k) score
+    tile, and the fp32 running (max, denom, acc) scratch — the attention
+    analogue of ``vmem_footprint``.
+    """
+    inputs = 2 * (block_q * d + 2 * block_k * d) * itemsize
+    scores = block_q * block_k * 4
+    scratch = block_q * (d + 2) * 4
+    return inputs + scores + scratch
 
 # MXU-aligned candidates; power-of-two multiples of 128 so any mix has a
 # small lcm (chain execution needs one padded size divisible by all three).
@@ -65,6 +106,19 @@ DEFAULT_CANDIDATES: tuple = (
     (512, 512, 256), (256, 512, 512), (128, 512, 512),
     (512, 128, 512), (256, 256, 512), (512, 256, 512),
 )
+
+#: (block_q, block_k) candidates for the flash-attention sweep — MXU-aligned
+#: powers of two; the q/kv tile shapes the TPU pipeline can double-buffer.
+DEFAULT_ATTN_CANDIDATES: tuple = (
+    (128, 128), (128, 256), (256, 128), (256, 256),
+    (256, 512), (512, 256), (512, 512), (512, 1024), (1024, 512),
+)
+
+#: Default ``square_pallas`` memory-tier thresholds (operand bytes):
+#: whole-operand-resident below the first, panel-resident up to the second,
+#: generic two-operand streaming kernel above. Overridable per backend/dtype
+#: through the ``square_panel`` cache namespace (``square_tiers``).
+DEFAULT_SQUARE_TIERS: tuple = (SQUARE_VMEM_LIMIT, SQUARE_PANEL_LIMIT)
 
 # In-memory image of each cache file, keyed by resolved path.
 _MEM: dict = {}
@@ -78,16 +132,38 @@ def cache_path() -> Path:
     return Path.home() / ".cache" / "repro" / "autotune.json"
 
 
-def _key(m: int, n: int, k: int, dtype=None, backend: Optional[str] = None) -> str:
+def _key(m: int, n: int, k: int, dtype=None, backend: Optional[str] = None,
+         kernel: str = "matmul") -> str:
+    d = jnp.dtype(dtype).name if dtype is not None else "any"
+    b = backend or jax.default_backend()
+    return f"{kernel}/{m}x{n}x{k}/{d}/{b}"
+
+
+def _legacy_key(m: int, n: int, k: int, dtype=None,
+                backend: Optional[str] = None) -> str:
+    """Pre-namespace (PR 1) matmul key — still honored on lookup."""
     d = jnp.dtype(dtype).name if dtype is not None else "any"
     b = backend or jax.default_backend()
     return f"{m}x{n}x{k}/{d}/{b}"
 
 
+def _tiers_key(dtype=None, backend: Optional[str] = None) -> str:
+    d = jnp.dtype(dtype).name if dtype is not None else "any"
+    b = backend or jax.default_backend()
+    return f"square_panel/tiers/{d}/{b}"
+
+
 def _valid_entry(entry) -> bool:
+    """A usable cache entry: a block tiling (len 2 for attention, len 3 for
+    matmul) or a ``square_panel`` tier pair (two ascending positive ints)."""
     try:
+        if "tiers" in entry:
+            tiers = entry["tiers"]
+            return (len(tiers) == 2
+                    and all(isinstance(x, int) and x > 0 for x in tiers)
+                    and tiers[0] <= tiers[1])
         blocks = entry["blocks"]
-        return (len(blocks) == 3
+        return (len(blocks) in (2, 3)
                 and all(isinstance(x, int) and x > 0 for x in blocks))
     except (TypeError, KeyError):
         return False
@@ -140,24 +216,80 @@ def clear_memory_cache() -> None:
 
 
 def lookup(m: int, n: int, k: int, dtype=None,
-           backend: Optional[str] = None) -> Optional[tuple]:
-    """Tuned (block_m, block_n, block_k) for the problem key, or None."""
+           backend: Optional[str] = None,
+           kernel: str = "matmul") -> Optional[tuple]:
+    """Tuned blocks for the ``kernel``-namespace problem key, or ``None``.
+
+    The key is ``{kernel}/{m}x{n}x{k}/{dtype}/{backend}``; for attention the
+    three dims are ``(sq, skv, d)`` and the entry is ``(block_q, block_k)``.
+    A dtype-specific entry wins over a dtype-agnostic (``any``) one; matmul
+    lookups additionally fall back to the pre-namespace PR 1 key format so
+    existing caches keep working. Callers must re-validate the returned
+    blocks against current kernel invariants (see ``ops.pick_blocks``) —
+    the cache is advisory, never trusted blindly. Entries whose block count
+    doesn't match the namespace (3 for matmul, 2 for attention — e.g. a
+    hand-edited file) are skipped, never returned.
+    """
     cache = load_cache()
-    for key in (_key(m, n, k, dtype, backend), _key(m, n, k, None, backend)):
+    keys = [_key(m, n, k, dtype, backend, kernel),
+            _key(m, n, k, None, backend, kernel)]
+    if kernel == "matmul":
+        keys += [_legacy_key(m, n, k, dtype, backend),
+                 _legacy_key(m, n, k, None, backend)]
+    want_len = 2 if kernel == "attention" else 3
+    for key in keys:
         entry = cache.get(key)
-        if entry is not None and _valid_entry(entry):
+        if (entry is not None and _valid_entry(entry)
+                and "blocks" in entry and len(entry["blocks"]) == want_len):
             return tuple(entry["blocks"])
     return None
 
 
 def record(m: int, n: int, k: int, blocks: Sequence[int], dtype=None,
            backend: Optional[str] = None, score: Optional[float] = None,
-           measured: bool = False, save: bool = True) -> None:
-    """Store the winning tiling for a problem key (and persist by default)."""
+           measured: bool = False, save: bool = True,
+           kernel: str = "matmul") -> None:
+    """Store the winning blocks for a problem key (and persist by default).
+
+    ``measured`` records provenance: ``True`` for wall-clock winners timed on
+    real hardware, ``False`` for the analytic model — so modeled entries can
+    be invalidated wholesale once hardware numbers exist. ``score`` is the
+    winning metric (µs when measured, the unitless model score otherwise).
+    """
     cache = load_cache()
-    cache[_key(m, n, k, dtype, backend)] = {
+    cache[_key(m, n, k, dtype, backend, kernel)] = {
         "blocks": [int(x) for x in blocks],
         "score": None if score is None else float(score),
+        "measured": bool(measured),
+    }
+    if save:
+        save_cache(cache)
+
+
+def square_tiers(dtype=None, backend: Optional[str] = None) -> tuple:
+    """(whole_limit, panel_limit) operand-byte thresholds for ``square_pallas``.
+
+    Consults the ``square_panel`` cache namespace (dtype-specific entry
+    first, then dtype-agnostic) and falls back to ``DEFAULT_SQUARE_TIERS``.
+    """
+    cache = load_cache()
+    for key in (_tiers_key(dtype, backend), _tiers_key(None, backend)):
+        entry = cache.get(key)
+        if entry is not None and _valid_entry(entry) and "tiers" in entry:
+            return tuple(entry["tiers"])
+    return DEFAULT_SQUARE_TIERS
+
+
+def record_square_tiers(whole_limit: int, panel_limit: int, dtype=None,
+                        backend: Optional[str] = None, measured: bool = False,
+                        save: bool = True) -> None:
+    """Store tuned ``square_pallas`` tier thresholds (operand bytes)."""
+    if not (0 < whole_limit <= panel_limit):
+        raise ValueError(f"tiers must be ascending positive ints, got "
+                         f"({whole_limit}, {panel_limit})")
+    cache = load_cache()
+    cache[_tiers_key(dtype, backend)] = {
+        "tiers": [int(whole_limit), int(panel_limit)],
         "measured": bool(measured),
     }
     if save:
@@ -187,6 +319,29 @@ def modeled_score(m: int, n: int, k: int, blocks: Sequence[int], dtype,
     return waste / intensity
 
 
+def modeled_attn_score(sq: int, skv: int, d: int, blocks: Sequence[int],
+                       dtype,
+                       vmem_budget_bytes: int = VMEM_BUDGET) -> float:
+    """Analytic cost proxy for a flash-attention ``(block_q, block_k)`` pair.
+
+    Same shape as ``modeled_score``: infinite when the working set busts
+    VMEM or the tile cannot divide the (clamped) sequence lengths — the
+    kernel's hard divisibility invariant (attention.py) — otherwise padding
+    waste over the arithmetic intensity of one grid step.
+    """
+    bq, bk = blocks
+    itemsize = jnp.dtype(dtype).itemsize
+    if attn_vmem_footprint(bq, bk, d, itemsize) > vmem_budget_bytes:
+        return float("inf")
+    if sq % min(bq, sq) or skv % min(bk, skv):
+        return float("inf")
+    flops = 4 * bq * bk * d            # scores + p@v per grid step
+    move = (bq * d + 2 * bk * d) * itemsize
+    intensity = flops / move
+    waste = (_round_up(sq, bq) * _round_up(skv, bk)) / (sq * skv)
+    return waste / intensity
+
+
 def measure_us(m: int, n: int, k: int, blocks: Sequence[int], dtype,
                reps: int = 3, warmup: int = 1) -> float:
     """Wall-clock min-of-reps for one tiling (real compiled kernel only)."""
@@ -206,11 +361,48 @@ def measure_us(m: int, n: int, k: int, blocks: Sequence[int], dtype,
     return best * 1e6
 
 
+def measure_attn_us(sq: int, skv: int, d: int, blocks: Sequence[int], dtype,
+                    reps: int = 3, warmup: int = 1) -> float:
+    """Wall-clock min-of-reps for one attention tiling (real TPU only)."""
+    from repro.kernels.attention import flash_attention
+    bq, bk = blocks
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.standard_normal((sq, d)), dtype)
+    k = jnp.asarray(rng.standard_normal((skv, d)), dtype)
+    v = jnp.asarray(rng.standard_normal((skv, d)), dtype)
+    fn = lambda: flash_attention(q, k, v, block_q=bq, block_k=bk)
+    for _ in range(warmup):
+        jax.block_until_ready(fn())
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
+
+
+def _run_sweep(candidates, score_fn, fallback_fn, *, measure, record_fn,
+               save: bool):
+    """Shared sweep loop: score all candidates, pick/record the winner."""
+    results = []
+    for blocks in candidates:
+        results.append({"blocks": blocks, "score": score_fn(blocks),
+                        "measured": measure})
+    results.sort(key=lambda r: r["score"])
+    best = results[0]
+    if not math.isfinite(best["score"]):
+        best = {"blocks": fallback_fn(), "score": None, "measured": False}
+    if save:
+        record_fn(best)
+    return tuple(best["blocks"]), results
+
+
 def sweep(m: int, n: int, k: int, dtype=jnp.float32,
           candidates: Optional[Iterable[Sequence[int]]] = None, *,
           backend: Optional[str] = None, measure: Optional[bool] = None,
           reps: int = 3, save: bool = True):
-    """Score every candidate tiling, record the winner, return (best, results).
+    """Score every candidate matmul tiling, record the winner under the
+    ``matmul`` namespace, return ``(best, results)``.
 
     ``measure=None`` auto-selects: wall-clock on a real TPU backend, the
     analytic model otherwise. ``results`` is a list of dicts (blocks, score,
@@ -220,23 +412,97 @@ def sweep(m: int, n: int, k: int, dtype=jnp.float32,
                   for c in (candidates or DEFAULT_CANDIDATES)]
     if measure is None:
         measure = jax.default_backend() == "tpu"
-    results = []
-    for blocks in candidates:
-        if measure:
-            score = measure_us(m, n, k, blocks, dtype, reps=reps)
-        else:
-            score = modeled_score(m, n, k, blocks, dtype)
-        results.append({"blocks": blocks, "score": score, "measured": measure})
-    results.sort(key=lambda r: r["score"])
-    best = results[0]
-    if not math.isfinite(best["score"]):
+    itemsize = jnp.dtype(dtype).itemsize
+    return _run_sweep(
+        candidates,
+        (lambda b: measure_us(m, n, k, b, dtype, reps=reps)) if measure
+        else (lambda b: modeled_score(m, n, k, b, dtype)),
         # Every candidate busts VMEM — fall back to the smallest-footprint
         # tiling (NOT lexicographic min, which could pick a huge tile).
+        lambda: min(candidates, key=lambda c: vmem_footprint(c, itemsize)),
+        measure=measure,
+        record_fn=lambda best: record(
+            m, n, k, best["blocks"], dtype=dtype, backend=backend,
+            score=best["score"], measured=bool(measure and best["score"])),
+        save=save)
+
+
+def sweep_attention(sq: int, skv: int, d: int, dtype=jnp.float32,
+                    candidates: Optional[Iterable[Sequence[int]]] = None, *,
+                    backend: Optional[str] = None,
+                    measure: Optional[bool] = None,
+                    reps: int = 3, save: bool = True):
+    """Score every candidate ``(block_q, block_k)`` pair for an attention
+    problem, record the winner under the ``attention`` namespace, return
+    ``(best, results)`` — the flash-attention face of ``sweep``.
+    """
+    candidates = [tuple(int(x) for x in c)
+                  for c in (candidates or DEFAULT_ATTN_CANDIDATES)]
+    if measure is None:
+        measure = jax.default_backend() == "tpu"
+    itemsize = jnp.dtype(dtype).itemsize
+
+    def _measured(b):
+        # A candidate the kernel rejects (divisibility ValueError) scores
+        # inf instead of aborting the sweep — parity with the modeled path.
+        try:
+            return measure_attn_us(sq, skv, d, b, dtype, reps=reps)
+        except ValueError:
+            return float("inf")
+
+    return _run_sweep(
+        candidates,
+        _measured if measure
+        else (lambda b: modeled_attn_score(sq, skv, d, b, dtype)),
+        lambda: min(candidates,
+                    key=lambda c: attn_vmem_footprint(c[0], c[1], d,
+                                                      itemsize)),
+        measure=measure,
+        record_fn=lambda best: record(
+            sq, skv, d, best["blocks"], dtype=dtype, backend=backend,
+            score=best["score"], measured=bool(measure and best["score"]),
+            kernel="attention"),
+        save=save)
+
+
+def sweep_square_tiers(dtype=jnp.float32, *, backend: Optional[str] = None,
+                       measure: Optional[bool] = None,
+                       save: bool = True) -> tuple:
+    """Record the ``square_pallas`` tier thresholds for this backend.
+
+    On real TPU hardware the crossover between the whole-operand, panel-
+    resident, and two-operand kernels would be timed at probe sizes around
+    each default boundary; everywhere else the defaults are recorded as a
+    modeled (``measured: false``) entry so the cache documents the active
+    policy and hardware sweeps know what to invalidate.
+    """
+    if measure is None:
+        measure = jax.default_backend() == "tpu"
+    whole, panel = DEFAULT_SQUARE_TIERS
+    if measure:
+        # Probe one size per boundary: largest power-of-two operand that
+        # stays under the default threshold; promote/demote the threshold if
+        # the neighboring kernel wins there.
         itemsize = jnp.dtype(dtype).itemsize
-        best = {"blocks": min(candidates,
-                              key=lambda c: vmem_footprint(c, itemsize)),
-                "score": None, "measured": False}
+        from repro.kernels.matmul import square_pallas
+
+        def _time(p, vmem_limit, panel_limit):
+            rng = np.random.default_rng(0)
+            a = jnp.asarray(rng.standard_normal((p, p)), dtype)
+            fn = lambda: square_pallas(a, vmem_limit=vmem_limit,
+                                       panel_limit=panel_limit)
+            jax.block_until_ready(fn())
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn())
+            return time.perf_counter() - t0
+
+        p0 = 1 << int(math.log2(math.isqrt(whole // itemsize)))
+        if _time(p0, whole, panel) > _time(p0, 1, panel):
+            whole = p0 * p0 * itemsize - 1          # panel wins: shrink tier
+        p1 = 1 << int(math.log2(math.isqrt(panel // itemsize)))
+        if _time(p1, whole, panel) > _time(p1, 1, 1):
+            panel = p1 * p1 * itemsize - 1          # two-op wins: shrink tier
     if save:
-        record(m, n, k, best["blocks"], dtype=dtype, backend=backend,
-               score=best["score"], measured=bool(measure))
-    return tuple(best["blocks"]), results
+        record_square_tiers(whole, panel, dtype=dtype, backend=backend,
+                            measured=bool(measure))
+    return whole, panel

@@ -35,8 +35,10 @@ except Exception:  # pragma: no cover
     pltpu = None
     _HAVE_PLTPU = False
 
-__all__ = ["matmul_kernel", "matmul_pallas", "square_kernel", "square_pallas",
-           "DEFAULT_BLOCK", "SQUARE_VMEM_LIMIT"]
+__all__ = ["matmul_kernel", "matmul_pallas", "square_kernel",
+           "square_panel_kernel", "square_pallas", "square_tier",
+           "panel_vmem_footprint",
+           "DEFAULT_BLOCK", "SQUARE_VMEM_LIMIT", "SQUARE_PANEL_LIMIT"]
 
 # Default tile: 512x512 output tile, K panels of 512. VMEM footprint
 # (bf16 in, f32 acc): 2*512*512*2 + 512*512*4 = 2.0 MiB << ~16 MiB VMEM,
@@ -129,9 +131,43 @@ def _acc_scratch(block_m: int, block_n: int):
 
 
 # Largest whole-operand footprint the single-ref square kernel will stage in
-# VMEM. Above this, square_pallas falls back to the generic two-operand tiled
-# kernel (still correct, just without the shared staging).
+# VMEM. Above this, square_pallas moves to the panel-resident kernel.
 SQUARE_VMEM_LIMIT = 8 * 1024 * 1024
+
+# Largest operand the panel-resident square kernel covers: above this the
+# row/column K-panels themselves stop fitting comfortably in VMEM and
+# square_pallas falls back to the generic two-operand streaming kernel.
+# Both thresholds are tunable cache entries — see autotune.square_tiers.
+SQUARE_PANEL_LIMIT = 64 * 1024 * 1024
+
+
+def panel_vmem_footprint(p: int, block_m: int, block_n: int,
+                         itemsize: int = 2) -> int:
+    """Working-set bytes of one panel-tier grid step: the double-buffered
+    (block_m, P) row and (P, block_n) column panels plus the output tile.
+    The panel tier is only usable when this fits VMEM — ``square_pallas``
+    demotes to the two-operand streaming kernel otherwise."""
+    return 2 * (block_m * p + p * block_n) * itemsize + block_m * block_n * 4
+
+
+def square_tier(operand_bytes: int, vmem_limit: int = SQUARE_VMEM_LIMIT,
+                panel_limit: int = SQUARE_PANEL_LIMIT) -> str:
+    """Memory-tier policy for C = A @ A: which kernel serves this operand.
+
+    ``"whole"``       — A fits ``vmem_limit``: stage the entire operand once
+                        for both sides of the dot (``square_kernel``).
+    ``"panel"``       — A fits ``panel_limit``: stage the K row-panel once
+                        per row of output tiles (``square_panel_kernel``).
+    ``"two_operand"`` — stream tiles of A twice through ``matmul_kernel``.
+
+    Boundaries are inclusive: an operand exactly at a limit takes the more
+    VMEM-resident tier.
+    """
+    if operand_bytes <= vmem_limit:
+        return "whole"
+    if operand_bytes <= panel_limit:
+        return "panel"
+    return "two_operand"
 
 
 def square_kernel(a_ref, o_ref, *, block_m: int, block_n: int, out_dtype):
@@ -153,10 +189,28 @@ def square_kernel(a_ref, o_ref, *, block_m: int, block_n: int, out_dtype):
     ).astype(out_dtype)
 
 
+def square_panel_kernel(row_ref, col_ref, o_ref, *, out_dtype):
+    """Grid point (i, j): C tile (i, j) of A @ A from VMEM-resident K-panels.
+
+    The middle memory tier between the whole-operand ``square_kernel`` and
+    the fully streaming ``matmul_kernel``: both refs view the SAME matrix A,
+    sliced as the (block_m, P) row panel and the (P, block_n) column panel
+    of the output tile. The row panel's index map depends only on ``i`` and
+    ``j`` is the innermost (sequential) grid dimension, so the pipeline
+    stages each row panel HBM->VMEM once per row of output tiles — the
+    paper's local-memory staging applied at panel granularity. Operand HBM
+    traffic drops from 2 tile-reads per grid step to one panel-read per
+    output tile plus one panel-read per output row.
+    """
+    o_ref[...] = jnp.dot(
+        row_ref[...], col_ref[...], preferred_element_type=jnp.float32
+    ).astype(out_dtype)
+
+
 @functools.partial(
     jax.jit,
     static_argnames=("block_m", "block_n", "block_k", "interpret", "out_dtype",
-                     "vmem_limit"),
+                     "vmem_limit", "panel_limit"),
 )
 def square_pallas(
     a: jax.Array,
@@ -167,18 +221,34 @@ def square_pallas(
     interpret: bool = False,
     out_dtype=None,
     vmem_limit: int = SQUARE_VMEM_LIMIT,
+    panel_limit: int = SQUARE_PANEL_LIMIT,
 ) -> jax.Array:
     """C = A @ A for a block-divisible square A — the squaring-chain step.
 
-    When A fits under ``vmem_limit`` the single-ref kernel stages the operand
-    once for both sides of the dot; otherwise delegates to ``matmul_pallas``
-    with A passed as both operands.
+    Kernel choice follows the ``square_tier`` memory policy on the operand's
+    byte size: the whole-operand single-ref kernel below ``vmem_limit``, the
+    panel-resident kernel (K-panels staged once per row of output tiles) up
+    to ``panel_limit``, and the generic two-operand ``matmul_pallas`` above
+    that. Both thresholds are static arguments so tuned tier entries from
+    ``autotune.square_tiers`` flow through ``ops.square`` / ``MatmulChain``.
+
+    Block-size constraints: the whole-operand and panel tiers need the shape
+    divisible by ``block_m`` and ``block_n``; the two-operand tier needs
+    ``block_k`` to divide too (checked by ``matmul_pallas``). A non-divisible
+    shape raises ``ValueError`` — ``ops.square`` / ``ops.MatmulChain`` pad
+    arbitrary shapes before calling in here.
     """
     if a.ndim != 2 or a.shape[0] != a.shape[1]:
         raise ValueError(f"square_pallas needs a square 2-D matrix, got {a.shape}")
     p = a.shape[0]
     out_dtype = out_dtype or a.dtype
-    if p * p * a.dtype.itemsize > vmem_limit:
+    tier = square_tier(p * p * a.dtype.itemsize, vmem_limit, panel_limit)
+    if tier == "panel" and panel_vmem_footprint(
+            p, block_m, block_n, a.dtype.itemsize) > 2 * SQUARE_VMEM_LIMIT:
+        # The operand qualifies for the panel tier but these block shapes
+        # make the panels themselves bust VMEM — stream like the old path.
+        tier = "two_operand"
+    if tier == "two_operand":
         return matmul_pallas(a, a, block_m=block_m, block_n=block_n,
                              block_k=block_k, interpret=interpret,
                              out_dtype=out_dtype)
@@ -191,16 +261,38 @@ def square_pallas(
     if _HAVE_PLTPU and not interpret:
         params_cls = getattr(pltpu, "CompilerParams", None) or getattr(
             pltpu, "TPUCompilerParams")
+        # whole tier: both grid dims independent. panel tier: j must run
+        # sequentially innermost so each row panel is staged exactly once.
         kwargs["compiler_params"] = params_cls(
-            dimension_semantics=("parallel", "parallel"))
+            dimension_semantics=("parallel", "parallel") if tier == "whole"
+            else ("parallel", "arbitrary"))
 
+    grid = (p // block_m, p // block_n)
+    out_spec = pl.BlockSpec((block_m, block_n), lambda i, j: (i, j))
+    out_shape = jax.ShapeDtypeStruct((p, p), out_dtype)
+
+    if tier == "whole":
+        return pl.pallas_call(
+            functools.partial(square_kernel, block_m=block_m, block_n=block_n,
+                              out_dtype=out_dtype),
+            grid=grid,
+            in_specs=[pl.BlockSpec((p, p), lambda i, j: (0, 0))],
+            out_specs=out_spec,
+            out_shape=out_shape,
+            interpret=interpret,
+            **kwargs,
+        )(a)
+
+    # Panel tier: the same array twice, viewed as row and column K-panels.
     return pl.pallas_call(
-        functools.partial(square_kernel, block_m=block_m, block_n=block_n,
-                          out_dtype=out_dtype),
-        grid=(p // block_m, p // block_n),
-        in_specs=[pl.BlockSpec((p, p), lambda i, j: (0, 0))],
-        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((p, p), out_dtype),
+        functools.partial(square_panel_kernel, out_dtype=out_dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, p), lambda i, j: (i, 0)),
+            pl.BlockSpec((p, block_n), lambda i, j: (0, j)),
+        ],
+        out_specs=out_spec,
+        out_shape=out_shape,
         interpret=interpret,
         **kwargs,
-    )(a)
+    )(a, a)

@@ -14,14 +14,20 @@
                   pad/unpad/block-pick), un-pads once at exit, and donates the
                   squaring input so eager chains reuse HBM buffers in place.
 ``attention``   — flash attention wrapper with the same dispatch contract.
-``pick_blocks`` — tile selection: persistent autotune cache first
+``dense_matmul``— the model-layer (..., K) @ (K, N) projection routed through
+                  the tuned tiled kernel (``models.layers.dense`` calls it).
+``pick_blocks`` — matmul tile selection: persistent autotune cache first
                   (``repro.kernels.autotune``), VMEM heuristic fallback.
+``pick_attn_blocks``
+                — the flash-attention (block_q, block_k) face of the same
+                  tuning subsystem (``attention`` cache namespace).
 """
 
 from __future__ import annotations
 
 import functools
 import math
+import os
 
 import jax
 import jax.numpy as jnp
@@ -30,8 +36,9 @@ from repro.kernels import ref as _ref
 from repro.kernels.matmul import (matmul_pallas, square_pallas, DEFAULT_BLOCK,
                                   SQUARE_VMEM_LIMIT)
 
-__all__ = ["matmul", "square", "attention", "pick_blocks", "pad_to_blocks",
-           "MatmulChain", "pallas_supported"]
+__all__ = ["matmul", "square", "attention", "dense_matmul", "pick_blocks",
+           "pick_attn_blocks", "pad_to_blocks", "MatmulChain",
+           "pallas_supported"]
 
 
 def pallas_supported() -> bool:
@@ -87,6 +94,73 @@ def pick_blocks(m: int, n: int, k: int,
     while footprint(bm, bn, bk) > vmem_budget_bytes and bm > 128:
         bm //= 2
     return bm, bn, bk
+
+
+def pick_attn_blocks(sq: int, skv: int, d: int,
+                     vmem_budget_bytes=None,
+                     dtype=None, use_cache: bool = True):
+    """Choose (block_q, block_k) for a flash-attention (sq, skv, d) problem.
+
+    The attention face of the tuning subsystem: consults the persistent
+    cache's ``attention`` namespace first, then falls back to a heuristic
+    mirroring the kernel's historical defaults (256/256) shrunk to divide
+    the sequence lengths and fit the VMEM budget.
+
+    Cache entries are re-validated against the kernel's hard invariants
+    before being trusted (the same discipline as ``pick_blocks``): both
+    blocks MXU 128-aligned, each dividing its (clamped) sequence length —
+    ``flash_attention`` raises ``ValueError`` otherwise — and an
+    ``attn_vmem_footprint`` within 2x the modeled budget (measured-on-TPU
+    winners may exceed the conservative model; an uncompilable entry must
+    not). Invalid entries fall through to the heuristic, never raise.
+
+    For ragged lengths the heuristic uses the largest divisor <= 256; when
+    only a degenerate divisor exists (near-prime lengths) it takes the whole
+    axis as one tile if that fits 2x the budget and raises ``ValueError``
+    (pad the sequence) otherwise — a sliver tile would fail Mosaic lowering
+    on real TPUs anyway.
+    """
+    from repro.kernels import autotune
+    if vmem_budget_bytes is None:
+        vmem_budget_bytes = autotune.VMEM_BUDGET
+    itemsize = jnp.dtype(dtype).itemsize if dtype is not None else 2
+    if use_cache:
+        tuned = autotune.lookup(sq, skv, d, dtype=dtype, kernel="attention")
+        if (tuned is not None and len(tuned) == 2
+                and all(x % 128 == 0 for x in tuned)
+                and sq % min(tuned[0], sq) == 0
+                and skv % min(tuned[1], skv) == 0
+                and autotune.attn_vmem_footprint(
+                    min(tuned[0], sq), min(tuned[1], skv), d,
+                    itemsize=itemsize) <= 2 * vmem_budget_bytes):
+            return tuned
+
+    def footprint(bq, bk):
+        return autotune.attn_vmem_footprint(bq, bk, d, itemsize=itemsize)
+
+    def seq_block(s):
+        b = min(256, s)
+        if s % b == 0:
+            return b
+        # Ragged length: largest divisor <= 256 (trace-time only, s is
+        # static), e.g. 333 -> 111. Degenerate divisors (near-prime s) take
+        # the whole axis as one tile when that can exist in VMEM at all.
+        b = max(x for x in range(1, min(256, s) + 1) if s % x == 0)
+        return s if b < 16 < s else b
+
+    bq, bk = seq_block(sq), seq_block(skv)
+    # Shrink the KV tile first (more sequential steps but smaller score
+    # tile), then the query tile — only along divisibility-preserving steps.
+    while footprint(bq, bk) > vmem_budget_bytes and bk > 128 and skv % (bk // 2) == 0:
+        bk //= 2
+    while footprint(bq, bk) > vmem_budget_bytes and bq > 128 and sq % (bq // 2) == 0:
+        bq //= 2
+    if footprint(bq, bk) > 2 * vmem_budget_bytes:
+        raise ValueError(
+            f"no usable attention tiling for seq lens ({sq},{skv}) at "
+            f"d={d}: the smallest divisor tiles bust VMEM; pad the "
+            f"sequence to a multiple of 128")
+    return bq, bk
 
 
 def _square_blocks(n: int, dtype, blocks=None):
@@ -166,9 +240,25 @@ def matmul(a: jax.Array, b: jax.Array, *, interpret: bool = False,
     return out
 
 
+def _square_tiers(dtype):
+    """Tier thresholds for this dtype — tuned cache entry or the defaults.
+
+    Resolved OUTSIDE the jitted kernels (they take the limits as static
+    arguments) so a cache update takes effect on the next call instead of
+    being baked into a stale jit cache entry.
+    """
+    from repro.kernels import autotune
+    return autotune.square_tiers(dtype=dtype)
+
+
 def square(a: jax.Array, *, interpret: bool = False, blocks=None,
            out_dtype=None) -> jax.Array:
-    """C = A @ A via the single-ref squaring kernel; arbitrary square shapes."""
+    """C = A @ A via the tiered squaring kernels; arbitrary square shapes.
+
+    Kernel choice (whole-operand-resident / panel-resident / two-operand)
+    follows the ``square_tier`` VMEM policy with thresholds resolved through
+    the tuning cache (``autotune.square_tiers``).
+    """
     out_dtype = out_dtype or a.dtype
     if not (interpret or pallas_supported()):
         return _ref.matmul_ref(a, a, out_dtype=out_dtype)
@@ -177,9 +267,11 @@ def square(a: jax.Array, *, interpret: bool = False, blocks=None,
             x, interpret=interpret, blocks=blocks, out_dtype=out_dtype))(a)
     n = a.shape[-1]
     (bm, bn, bk), padded_n = _square_blocks(n, a.dtype, blocks)
+    vmem_limit, panel_limit = _square_tiers(a.dtype)
     padded = pad_to_blocks(a, padded_n, padded_n)
     out = square_pallas(padded, block_m=bm, block_n=bn, block_k=bk,
-                        interpret=interpret, out_dtype=out_dtype)
+                        interpret=interpret, out_dtype=out_dtype,
+                        vmem_limit=vmem_limit, panel_limit=panel_limit)
     if out.shape != a.shape:
         out = out[:n, :n]
     return out
@@ -192,12 +284,15 @@ def square(a: jax.Array, *, interpret: bool = False, blocks=None,
 # consumed — see MatmulChain.square.
 @functools.partial(
     jax.jit,
-    static_argnames=("block_m", "block_n", "block_k", "interpret", "out_dtype"),
+    static_argnames=("block_m", "block_n", "block_k", "interpret", "out_dtype",
+                     "vmem_limit", "panel_limit"),
     donate_argnums=(0,),
 )
-def _square_step(a, *, block_m, block_n, block_k, interpret, out_dtype):
+def _square_step(a, *, block_m, block_n, block_k, interpret, out_dtype,
+                 vmem_limit, panel_limit):
     return square_pallas(a, block_m=block_m, block_n=block_n, block_k=block_k,
-                         interpret=interpret, out_dtype=out_dtype)
+                         interpret=interpret, out_dtype=out_dtype,
+                         vmem_limit=vmem_limit, panel_limit=panel_limit)
 
 
 @functools.partial(jax.jit, donate_argnums=(0,))
@@ -239,9 +334,13 @@ class MatmulChain:
         if self.active:
             self.blocks, self.padded_n = _square_blocks(self.n, self.dtype,
                                                         blocks)
+            # VMEM tier thresholds fixed once per chain (tuned cache entry
+            # or the defaults) — every squaring uses the same kernel tier.
+            self.tiers = _square_tiers(self.dtype)
         else:
             self.blocks = None
             self.padded_n = self.n
+            self.tiers = None
 
     # -- chain boundary ----------------------------------------------------
     def pad(self, a: jax.Array) -> jax.Array:
@@ -291,16 +390,26 @@ class MatmulChain:
         if x.ndim > 2:
             return jax.vmap(self.square)(x)
         bm, bn, bk = self.blocks
+        vmem_limit, panel_limit = self.tiers
         if self.donate and eager:
             return _square_step(x, block_m=bm, block_n=bn, block_k=bk,
-                                interpret=self.interpret, out_dtype=self.dtype)
+                                interpret=self.interpret, out_dtype=self.dtype,
+                                vmem_limit=vmem_limit,
+                                panel_limit=panel_limit)
         return square_pallas(x, block_m=bm, block_n=bn, block_k=bk,
-                             interpret=self.interpret, out_dtype=self.dtype)
+                             interpret=self.interpret, out_dtype=self.dtype,
+                             vmem_limit=vmem_limit, panel_limit=panel_limit)
 
 
 def attention(q, k, v, *, causal: bool = True, window=None, scale=None,
-              interpret: bool = False, block_q: int = 256, block_k: int = 256):
-    """Flash attention (q:(Sq,D), k/v:(Skv,D)) with XLA fallback off-TPU."""
+              interpret: bool = False, block_q=None, block_k=None):
+    """Flash attention (q:(Sq,D), k/v:(Skv,D)) with XLA fallback off-TPU.
+
+    ``block_q``/``block_k`` default to ``None`` — auto-tuned through
+    ``pick_attn_blocks`` (cache entry first, heuristic on a miss). Explicit
+    ints are honored exactly and must divide the sequence lengths after
+    clamping (``flash_attention`` raises ``ValueError`` otherwise).
+    """
     if not (interpret or pallas_supported()):
         return _ref.flash_attention_ref(q, k, v, causal=causal, window=window,
                                         scale=scale)
@@ -308,3 +417,64 @@ def attention(q, k, v, *, causal: bool = True, window=None, scale=None,
     return flash_attention(q, k, v, causal=causal, window=window, scale=scale,
                            interpret=interpret, block_q=block_q,
                            block_k=block_k)
+
+
+# ---------------------------------------------------------------------------
+# Dense-layer routing: model serving inherits tuned tiles for free
+# ---------------------------------------------------------------------------
+
+def _dense_mode() -> str:
+    """How ``dense_matmul`` dispatches: ``auto`` (Pallas when the backend
+    lowers it, XLA einsum otherwise), ``interpret`` (force the kernel body
+    on CPU — tests/validation), or ``off`` (always einsum)."""
+    return os.environ.get("REPRO_DENSE_PALLAS", "auto")
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def _dense_2d(x2, w, blocks, interpret):
+    return matmul(x2, w, interpret=interpret, blocks=blocks)
+
+
+def _dense_2d_fwd(x2, w, blocks, interpret):
+    return _dense_2d(x2, w, blocks, interpret), (x2, w)
+
+
+def _dense_2d_bwd(blocks, interpret, res, g):
+    # Cotangents through the same tiled kernel; the transposed problems
+    # re-pick their own (cached or heuristic) tiles.
+    x2, w = res
+    dx = matmul(g, w.T, interpret=interpret)
+    dw = matmul(x2.T, g, interpret=interpret)
+    return dx.astype(x2.dtype), dw.astype(w.dtype)
+
+
+_dense_2d.defvjp(_dense_2d_fwd, _dense_2d_bwd)
+
+
+def dense_matmul(x: jax.Array, w: jax.Array) -> jax.Array:
+    """y = x @ w for (..., K) activations against a (K, N) weight.
+
+    The model-layer projection path (``models.layers.dense``): consults
+    ``pick_blocks`` for the flattened (M, N, K) problem so serving inherits
+    tuned tiles from the same cache the matpow kernels populate, then runs
+    the tiled Pallas kernel (differentiable — cotangents route through the
+    kernel too). Off-TPU (or with ``REPRO_DENSE_PALLAS=off``) this is
+    exactly the XLA einsum the layer always used.
+
+    ``auto`` mode additionally requires a single device: GSPMD has no
+    partitioning rule for the pallas_call, so on a multi-device mesh the
+    tuned-kernel route would gather/replicate what the einsum partitions —
+    sharded training/serving keeps the einsum.
+    """
+    mode = _dense_mode()
+    m = math.prod(x.shape[:-1])
+    k = x.shape[-1]
+    n = w.shape[-1]
+    use_pallas = (mode == "interpret"
+                  or (mode == "auto" and pallas_supported()
+                      and jax.device_count() == 1))
+    if not use_pallas or m == 0:
+        return jnp.einsum("...d,df->...f", x, w)
+    blocks = pick_blocks(m, n, k, dtype=x.dtype)
+    y = _dense_2d(x.reshape(m, k), w, tuple(blocks), mode == "interpret")
+    return y.reshape(*x.shape[:-1], n)

@@ -26,6 +26,7 @@ from jax.ad_checkpoint import checkpoint_name
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ArchConfig
+from repro.kernels import ops as _kops
 
 __all__ = [
     "ShardCtx", "norm", "rope", "dense",
@@ -127,13 +128,18 @@ def rope(x, positions, *, theta: float = 10_000.0):
 def dense(x, w, b=None):
     """x (..., D_in) @ w (D_in, D_out).
 
+    Routed through ``ops.dense_matmul`` so the projection consults the same
+    persistent tile cache as the matpow kernels (``ops.pick_blocks`` on the
+    flattened problem) and runs the tuned tiled kernel where the backend
+    lowers it; off-TPU this stays the XLA einsum it always was.
+
     Output stays in the compute dtype: on TPU the MXU accumulates bf16
     matmuls in fp32 internally regardless, and forcing an fp32 *output*
     (preferred_element_type) would make every backward cotangent fp32 —
     doubling HBM traffic and halving MXU rate for the whole backward pass
     (measured in EXPERIMENTS.md §Perf, hillclimb H1-2).
     """
-    y = jnp.einsum("...d,df->...f", x, w.astype(x.dtype))
+    y = _kops.dense_matmul(x, w.astype(x.dtype))
     if b is not None:
         y = y + b.astype(y.dtype)
     return y

@@ -1,0 +1,357 @@
+"""Kernel-wide tuning subsystem: attention namespace round-trips,
+pick_attn_blocks re-validation, flash_attention / dense() consulting the
+cache, the square_pallas memory-tier policy, and tier threshold tuning.
+
+(The matmul namespace and the shared cache machinery are covered in
+tests/test_autotune.py; this file covers the PR 2 kernel-registry surface.)
+"""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import autotune, ops, ref
+from repro.kernels.attention import flash_attention
+from repro.kernels.matmul import (panel_vmem_footprint, square_pallas,
+                                  square_tier, SQUARE_VMEM_LIMIT,
+                                  SQUARE_PANEL_LIMIT)
+
+
+@pytest.fixture
+def tmp_cache(tmp_path, monkeypatch):
+    path = tmp_path / "autotune.json"
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(path))
+    autotune.clear_memory_cache()
+    yield path
+    autotune.clear_memory_cache()
+
+
+def _rand(shape, dtype=jnp.float32, seed=0, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal(shape) * scale, dtype)
+
+
+class TestAttentionCacheKeying:
+    def test_record_then_lookup(self, tmp_cache):
+        autotune.record(2048, 2048, 128, (512, 256), kernel="attention",
+                        dtype=jnp.bfloat16)
+        assert autotune.lookup(2048, 2048, 128, kernel="attention",
+                               dtype=jnp.bfloat16) == (512, 256)
+
+    def test_namespaces_are_distinct(self, tmp_cache):
+        """A matmul entry must never answer an attention lookup or vice
+        versa, even for identical problem dims."""
+        autotune.record(512, 512, 128, (256, 256, 128), dtype=jnp.float32)
+        autotune.record(512, 512, 128, (128, 128), kernel="attention",
+                        dtype=jnp.float32)
+        assert autotune.lookup(512, 512, 128,
+                               dtype=jnp.float32) == (256, 256, 128)
+        assert autotune.lookup(512, 512, 128, kernel="attention",
+                               dtype=jnp.float32) == (128, 128)
+
+    def test_two_element_blocks_survive_reload(self, tmp_cache):
+        autotune.record(1024, 1024, 64, (256, 512), kernel="attention")
+        autotune.clear_memory_cache()
+        assert autotune.lookup(1024, 1024, 64,
+                               kernel="attention") == (256, 512)
+
+    def test_wrong_arity_blocks_never_cross_namespaces(self, tmp_cache):
+        """A 2-element entry misfiled under a matmul key (hand-edit or a
+        forgotten kernel= arg) must be skipped, not crash pick_blocks."""
+        autotune.record(2048, 2048, 128, (512, 256), dtype=jnp.float32)
+        assert autotune.lookup(2048, 2048, 128, dtype=jnp.float32) is None
+        bm, bn, bk = ops.pick_blocks(2048, 2048, 128, dtype=jnp.float32)
+        assert all(x % 128 == 0 for x in (bm, bn, bk))
+        autotune.record(512, 512, 64, (128, 128, 128), kernel="attention")
+        assert autotune.lookup(512, 512, 64, kernel="attention") is None
+
+    def test_measured_attention_sweep_skips_rejected_candidates(
+            self, tmp_cache, monkeypatch):
+        """A candidate the kernel rejects (divisibility ValueError on real
+        hardware) scores inf instead of aborting the measured sweep."""
+        def fake_measure(sq, skv, d, blocks, dtype, reps=3, warmup=1):
+            if blocks == (512, 1024):
+                raise ValueError("seq lens not divisible by blocks")
+            return float(sum(blocks))
+
+        monkeypatch.setattr(autotune, "measure_attn_us", fake_measure)
+        best, results = autotune.sweep_attention(
+            1536, 1536, 128, dtype=jnp.float32, measure=True,
+            candidates=[(512, 1024), (256, 256)])
+        assert best == (256, 256)
+        scores = {r["blocks"]: r["score"] for r in results}
+        assert scores[(512, 1024)] == float("inf")
+
+    def test_attention_sweep_populates_namespace(self, tmp_cache):
+        best, results = autotune.sweep_attention(
+            1024, 1024, 128, dtype=jnp.float32,
+            candidates=[(128, 128), (256, 256)])
+        assert best in [(128, 128), (256, 256)]
+        assert len(results) == 2
+        assert autotune.lookup(1024, 1024, 128, kernel="attention",
+                               dtype=jnp.float32) == best
+
+
+class TestPickAttnBlocks:
+    def test_consults_cache(self, tmp_cache):
+        autotune.record(256, 256, 64, (128, 128), kernel="attention",
+                        dtype=jnp.float32)
+        assert ops.pick_attn_blocks(256, 256, 64,
+                                    dtype=jnp.float32) == (128, 128)
+
+    def test_heuristic_matches_historical_defaults(self, tmp_cache):
+        # The pre-tuning kernel defaults were (256, 256) clamped to seq len.
+        assert ops.pick_attn_blocks(2048, 2048, 128) == (256, 256)
+        assert ops.pick_attn_blocks(128, 512, 64) == (128, 256)
+
+    def test_heuristic_divides_ragged_lengths(self, tmp_cache):
+        bq, bk = ops.pick_attn_blocks(384, 768, 64)
+        assert 384 % bq == 0 and 768 % bk == 0
+
+    def test_heuristic_prefers_large_divisors(self, tmp_cache):
+        # 333 = 3 * 111: the largest divisor <= 256 is 111, not a power of 2.
+        assert ops.pick_attn_blocks(333, 333, 64) == (111, 111)
+
+    def test_near_prime_length_takes_whole_axis(self, tmp_cache):
+        # 331 is prime: no divisor tile exists, the whole axis is one tile.
+        bq, bk = ops.pick_attn_blocks(331, 331, 64)
+        assert (bq, bk) == (331, 331)
+        q, k, v = (_rand((331, 64), seed=s) for s in (31, 32, 33))
+        got = flash_attention(q, k, v, causal=True, interpret=True)
+        want = ref.flash_attention_ref(q, k, v, causal=True)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-5, atol=2e-5)
+
+    def test_unusable_prime_length_raises_with_guidance(self, tmp_cache):
+        # A huge prime length: even the whole-axis tile busts VMEM.
+        with pytest.raises(ValueError, match="pad the sequence"):
+            ops.pick_attn_blocks(10007, 10007, 128)
+
+    def test_rejects_misaligned_entry(self, tmp_cache):
+        autotune.record(256, 256, 64, (100, 128), kernel="attention",
+                        dtype=jnp.float32)
+        assert ops.pick_attn_blocks(256, 256, 64,
+                                    dtype=jnp.float32) == (256, 256)
+
+    def test_rejects_non_dividing_entry(self, tmp_cache):
+        autotune.record(384, 384, 64, (256, 128), kernel="attention",
+                        dtype=jnp.float32)
+        bq, bk = ops.pick_attn_blocks(384, 384, 64, dtype=jnp.float32)
+        assert (bq, bk) != (256, 128)
+        assert 384 % bq == 0 and 384 % bk == 0
+
+    def test_rejects_vmem_busting_entry(self, tmp_cache):
+        # (2048, 2048) at d=128: fp32 score tile alone is 16 MiB > 2x budget.
+        autotune.record(2048, 2048, 128, (2048, 2048), kernel="attention",
+                        dtype=jnp.float32)
+        assert ops.pick_attn_blocks(2048, 2048, 128,
+                                    dtype=jnp.float32) == (256, 256)
+
+
+class TestFlashAttentionConsultsCache:
+    def test_auto_blocks_observed_from_seeded_cache(self, tmp_cache,
+                                                    monkeypatch):
+        """Pre-seed an attention entry and observe flash_attention choose it
+        when called without explicit blocks — the acceptance-criteria probe."""
+        autotune.record(256, 256, 64, (128, 128), kernel="attention",
+                        dtype=jnp.float32)
+        seen = {}
+        real = ops.pick_attn_blocks
+
+        def spy(*args, **kwargs):
+            seen["blocks"] = real(*args, **kwargs)
+            return seen["blocks"]
+
+        monkeypatch.setattr(ops, "pick_attn_blocks", spy)
+        q, k, v = (_rand((256, 64), seed=s) for s in (1, 2, 3))
+        got = flash_attention(q, k, v, causal=True, interpret=True)
+        assert seen["blocks"] == (128, 128)
+        want = ref.flash_attention_ref(q, k, v, causal=True)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-5, atol=2e-5)
+
+    def test_auto_blocks_heuristic_on_miss(self, tmp_cache, monkeypatch):
+        seen = {}
+        real = ops.pick_attn_blocks
+
+        def spy(*args, **kwargs):
+            seen["blocks"] = real(*args, **kwargs)
+            return seen["blocks"]
+
+        monkeypatch.setattr(ops, "pick_attn_blocks", spy)
+        q, k, v = (_rand((512, 64), seed=s) for s in (4, 5, 6))
+        flash_attention(q, k, v, causal=True, interpret=True)
+        assert seen["blocks"] == (256, 256)
+
+    def test_explicit_blocks_still_honored_and_checked(self, tmp_cache):
+        q, k, v = (_rand((256, 64), seed=s) for s in (7, 8, 9))
+        got = flash_attention(q, k, v, causal=True, interpret=True,
+                              block_q=64, block_k=64)
+        want = ref.flash_attention_ref(q, k, v, causal=True)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-5, atol=2e-5)
+        # Non-dividing explicit blocks keep raising (documented contract).
+        with pytest.raises(ValueError, match="not divisible"):
+            flash_attention(q, k, v, interpret=True, block_q=96, block_k=64)
+
+
+class TestSquareTierPolicy:
+    def test_boundaries_are_inclusive(self):
+        assert square_tier(SQUARE_VMEM_LIMIT) == "whole"
+        assert square_tier(SQUARE_VMEM_LIMIT + 1) == "panel"
+        assert square_tier(SQUARE_PANEL_LIMIT) == "panel"
+        assert square_tier(SQUARE_PANEL_LIMIT + 1) == "two_operand"
+
+    def test_custom_thresholds(self):
+        assert square_tier(100, vmem_limit=10, panel_limit=50) == \
+            "two_operand"
+        assert square_tier(30, vmem_limit=10, panel_limit=50) == "panel"
+        assert square_tier(10, vmem_limit=10, panel_limit=50) == "whole"
+
+    def test_panel_footprint_gates_default_blocks(self):
+        # 4096x4096 bf16 qualifies for the panel tier by operand bytes, but
+        # 512-wide panels bust VMEM — square_pallas must demote to the
+        # streaming kernel (the pre-PR2 behavior) rather than fail Mosaic.
+        assert panel_vmem_footprint(4096, 512, 512, itemsize=2) \
+            > 2 * SQUARE_VMEM_LIMIT
+        # 128-wide panels at the same size are fine.
+        assert panel_vmem_footprint(4096, 128, 128, itemsize=2) \
+            <= 2 * SQUARE_VMEM_LIMIT
+
+    def test_panel_matches_whole_numerics(self):
+        """Panel-resident kernel == whole-operand kernel == oracle on an
+        operand forced into each tier by moving the thresholds."""
+        a = _rand((256, 256), seed=10, scale=0.1)
+        want = np.float32(ref.matmul_ref(a, a))
+        whole = square_pallas(a, block_m=128, block_n=128, block_k=128,
+                              interpret=True)
+        panel = square_pallas(a, block_m=128, block_n=128, block_k=128,
+                              interpret=True, vmem_limit=1,
+                              panel_limit=1 << 30)
+        two = square_pallas(a, block_m=128, block_n=128, block_k=128,
+                            interpret=True, vmem_limit=1, panel_limit=1)
+        for got in (whole, panel, two):
+            np.testing.assert_allclose(np.float32(got), want,
+                                       rtol=1e-5, atol=1e-5)
+
+    def test_panel_beyond_whole_tier_matches_reference(self, tmp_cache):
+        """Acceptance probe: an operand ABOVE the whole-operand tier runs the
+        panel kernel (tier thresholds from the cache) and matches the
+        reference to fp32 tolerance — at a non-divisible size, so the ops
+        padding path is exercised too."""
+        # 200x200 fp32 = 160 kB; set whole-tier limit below it.
+        autotune.record_square_tiers(64 * 1024, 8 * 1024 * 1024,
+                                     dtype=jnp.float32)
+        a = _rand((200, 200), seed=11, scale=0.05)
+        got = ops.square(a, interpret=True)
+        want = ref.matmul_ref(a, a)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-4, atol=1e-5)
+
+    def test_chain_inherits_tuned_tiers(self, tmp_cache):
+        autotune.record_square_tiers(64 * 1024, 8 * 1024 * 1024,
+                                     dtype=jnp.float32)
+        chain = ops.MatmulChain(200, jnp.float32, interpret=True)
+        assert chain.tiers == (64 * 1024, 8 * 1024 * 1024)
+        a = _rand((200, 200), seed=12, scale=0.05)
+        x = chain.pad(a)
+        x = chain.square(x)
+        got = np.asarray(chain.unpad(x))
+        want = np.asarray(ref.matmul_ref(a, a))
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+class TestSquareTiersCache:
+    def test_round_trip(self, tmp_cache):
+        autotune.record_square_tiers(4096, 1 << 20, dtype=jnp.float32)
+        assert autotune.square_tiers(dtype=jnp.float32) == (4096, 1 << 20)
+
+    def test_defaults_on_miss(self, tmp_cache):
+        assert autotune.square_tiers(dtype=jnp.float32) == \
+            (SQUARE_VMEM_LIMIT, SQUARE_PANEL_LIMIT)
+
+    def test_dtype_agnostic_fallback(self, tmp_cache):
+        autotune.record_square_tiers(4096, 1 << 20, dtype=None)
+        assert autotune.square_tiers(dtype=jnp.bfloat16) == (4096, 1 << 20)
+
+    def test_descending_tiers_rejected(self, tmp_cache):
+        with pytest.raises(ValueError, match="ascending"):
+            autotune.record_square_tiers(1 << 20, 4096)
+
+    def test_invalid_tier_entry_filtered_from_disk(self, tmp_cache):
+        import json
+        tmp_cache.write_text(json.dumps({
+            "square_panel/tiers/float32/cpu": {"tiers": [100, 10]},
+        }))
+        assert autotune.square_tiers(dtype=jnp.float32) == \
+            (SQUARE_VMEM_LIMIT, SQUARE_PANEL_LIMIT)
+
+    def test_modeled_tier_sweep_records_defaults(self, tmp_cache):
+        whole, panel = autotune.sweep_square_tiers(dtype=jnp.float32,
+                                                   measure=False)
+        assert (whole, panel) == (SQUARE_VMEM_LIMIT, SQUARE_PANEL_LIMIT)
+        assert autotune.square_tiers(dtype=jnp.float32) == (whole, panel)
+
+
+class TestDenseConsultsCache:
+    def test_dense_observes_seeded_blocks(self, tmp_cache, monkeypatch):
+        """Pre-seed a matmul entry for the dense problem and observe dense()
+        route it to the tiled kernel — the acceptance-criteria probe."""
+        from repro.models import layers
+        monkeypatch.setenv("REPRO_DENSE_PALLAS", "interpret")
+        # dense problem: x (4, 32, 64) @ w (64, 96) -> (m, n, k) = (128, 96, 64)
+        autotune.record(128, 96, 64, (128, 128, 128), dtype=jnp.float32)
+        seen = {}
+        real = ops._dense_2d
+
+        def spy(x2, w, blocks, interpret):
+            seen["blocks"] = blocks
+            return real(x2, w, blocks, interpret)
+
+        monkeypatch.setattr(ops, "_dense_2d", spy)
+        x = _rand((4, 32, 64), seed=13)
+        w = _rand((64, 96), seed=14)
+        y = layers.dense(x, w)
+        assert seen["blocks"] == (128, 128, 128)
+        want = jnp.einsum("...d,df->...f", x, w)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(want),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_dense_gradients_match_einsum(self, tmp_cache, monkeypatch):
+        from repro.models import layers
+        x = _rand((8, 64), seed=15)
+        w = _rand((64, 128), seed=16)
+
+        def loss(w, x):
+            return jnp.sum(layers.dense(x, w) ** 2)
+
+        monkeypatch.setenv("REPRO_DENSE_PALLAS", "off")
+        gw_ref, gx_ref = jax.grad(loss, argnums=(0, 1))(w, x)
+        monkeypatch.setenv("REPRO_DENSE_PALLAS", "interpret")
+        gw, gx = jax.grad(loss, argnums=(0, 1))(w, x)
+        np.testing.assert_allclose(np.asarray(gw), np.asarray(gw_ref),
+                                   rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(np.asarray(gx), np.asarray(gx_ref),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_dense_off_mode_is_exact_einsum(self, tmp_cache, monkeypatch):
+        from repro.models import layers
+        monkeypatch.setenv("REPRO_DENSE_PALLAS", "off")
+        x = _rand((2, 16, 32), seed=17)
+        w = _rand((32, 48), seed=18)
+        y = layers.dense(x, w)
+        want = jnp.einsum("...d,df->...f", x, w)
+        assert jnp.array_equal(y, want)
+
+    def test_dense_bias_and_batch_dims(self, tmp_cache, monkeypatch):
+        from repro.models import layers
+        monkeypatch.setenv("REPRO_DENSE_PALLAS", "interpret")
+        x = _rand((2, 3, 5, 32), seed=19)
+        w = _rand((32, 16), seed=20)
+        b = _rand((16,), seed=21)
+        y = layers.dense(x, w, b)
+        want = jnp.einsum("...d,df->...f", x, w) + b
+        assert y.shape == (2, 3, 5, 16)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(want),
+                                   rtol=1e-4, atol=1e-4)
