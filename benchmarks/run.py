@@ -19,7 +19,9 @@ so the perf trajectory is tracked across PRs:
                          matmul blocks, attention (block_q, block_k), and
                          the square_pallas memory tiers (records winners
                          into the cache)
-  * distributed_bench  — Cannon vs gather collective matmul (4-dev CPU)
+  * distributed_bench  — chained (ShardedMatmulChain) vs per-call sharded
+                         squaring + Cannon vs gather schedules (4-dev CPU);
+                         also writes BENCH_distributed.json
   * roofline_bench     — per (arch x shape x mesh) dominant term from the
                          dry-run artifacts
 

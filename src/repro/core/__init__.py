@@ -19,12 +19,15 @@ from repro.core.distributed import (
     matmul_2d_gather,
     matmul_cannon,
     sharded_matmul,
+    ShardedMatmulChain,
     matpow_sharded,
+    expm_sharded,
 )
 
 __all__ = [
     "matpow_naive", "matpow_binary", "matpow_binary_traced", "matmul_backend",
     "chain_for",
     "expm", "prefix_scan", "prefix_products", "decay_prefix",
-    "matmul_2d_gather", "matmul_cannon", "sharded_matmul", "matpow_sharded",
+    "matmul_2d_gather", "matmul_cannon", "sharded_matmul",
+    "ShardedMatmulChain", "matpow_sharded", "expm_sharded",
 ]

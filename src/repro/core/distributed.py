@@ -18,11 +18,20 @@ Two collective-matmul schedules over a (rows x cols) mesh:
 
 Both are exact (fp32 accumulation) and validated against jnp.matmul in
 ``tests/test_distributed.py`` on a forced multi-device CPU.
+
+``ShardedMatmulChain`` fuses a whole squaring chain over either schedule the
+way ``ops.MatmulChain`` does on one device: the operand is padded to
+mesh-and-block multiples and committed to its 2-D sharding ONCE, every
+squaring is a donated jitted collective step (each device reuses its HBM
+shard for the output — the operand stays resident across the chain), and the
+result is un-padded once at exit. ``matpow_sharded`` and ``expm_sharded``
+route through it. See ``docs/distributed.md`` for the full story.
 """
 
 from __future__ import annotations
 
 import functools
+import math
 from typing import Optional
 
 import jax
@@ -31,11 +40,15 @@ from jax import lax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
+from repro.kernels.ops import PaddedChain
+
 __all__ = [
     "matmul_2d_gather",
     "matmul_cannon",
     "sharded_matmul",
+    "ShardedMatmulChain",
     "matpow_sharded",
+    "expm_sharded",
 ]
 
 
@@ -133,40 +146,283 @@ def _log2(x: int) -> int:
     return x.bit_length() - 1
 
 
+def _pick_algorithm(algorithm: str, rows: int, cols: int) -> str:
+    """Resolve ``"auto"`` to a concrete schedule for an (rows x cols) mesh.
+
+    Cannon wants a square multi-device mesh (its ring shifts assume one A
+    block and one B block per device per step); anything else — rectangular
+    meshes, degenerate 1 x c / r x 1 meshes, a single device — runs the
+    all-gather schedule, which is shape-agnostic.
+    """
+    if algorithm == "auto":
+        return "cannon" if rows == cols and rows > 1 else "gather"
+    if algorithm not in ("cannon", "gather"):
+        raise ValueError(f"unknown algorithm {algorithm!r}")
+    return algorithm
+
+
 def sharded_matmul(a, b, mesh: Mesh, *, algorithm: str = "auto",
                    row_axis: str = "data", col_axis: str = "model"):
-    """Dispatch to the best collective matmul for this mesh."""
+    """C = A @ B with A, B, C all 2-D sharded ``P(row_axis, col_axis)``.
+
+    Dispatches to the best collective-matmul schedule for this mesh shape
+    (see :func:`_pick_algorithm`): ``"cannon"`` on square multi-device
+    meshes, ``"gather"`` otherwise; pass either name explicitly to force a
+    schedule. Operand dims must divide the mesh axis sizes (``shard_map``
+    needs even shards) — :class:`ShardedMatmulChain` handles arbitrary sizes
+    by padding once at the chain boundary.
+
+    Args:
+      a, b: (n, n) operands, ideally already placed with a
+        ``NamedSharding(mesh, P(row_axis, col_axis))``; anything else is
+        resharded on entry by GSPMD.
+      mesh: the device mesh holding both operands.
+      algorithm: ``"auto"`` | ``"cannon"`` | ``"gather"``.
+      row_axis, col_axis: mesh axis names for the operands' two dims.
+
+    Returns:
+      The (n, n) product, 2-D sharded exactly like the inputs (fp32
+      accumulation, cast back to the input dtype).
+    """
     r, c = _mesh_axis_sizes(mesh, row_axis, col_axis)
-    if algorithm == "auto":
-        algorithm = "cannon" if r == c and r > 1 else "gather"
+    algorithm = _pick_algorithm(algorithm, r, c)
     if algorithm == "cannon":
         return matmul_cannon(a, b, mesh, row_axis=row_axis, col_axis=col_axis)
-    if algorithm == "gather":
-        return matmul_2d_gather(a, b, mesh, row_axis=row_axis, col_axis=col_axis)
-    raise ValueError(f"unknown algorithm {algorithm!r}")
+    return matmul_2d_gather(a, b, mesh, row_axis=row_axis, col_axis=col_axis)
+
+
+# Donated per-squaring collective step — the distributed analogue of
+# ops._square_step. Called EAGERLY (one dispatch per squaring in a
+# python-level chain) with the operand committed to the chain's 2-D
+# sharding, ``donate_argnums`` lets XLA alias each device's input shard to
+# its output shard: A^2 lands in the HBM that held A, so the operand stays
+# resident across the whole chain (the paper's "operand never leaves the
+# accelerator", per device). ``mesh``/``algorithm``/axis names are static,
+# so every chain on the same mesh shares one compiled step per operand
+# shape/dtype.
+@functools.partial(
+    jax.jit,
+    static_argnames=("mesh", "algorithm", "row_axis", "col_axis"),
+    donate_argnums=(0,),
+)
+def _sharded_square_step(x, *, mesh, algorithm, row_axis, col_axis):
+    return sharded_matmul(x, x, mesh, algorithm=algorithm,
+                          row_axis=row_axis, col_axis=col_axis)
+
+
+# Un-donated combine step for eager chains (matpow's popcount combines).
+# The ``result`` accumulator is NOT donated: ``mm`` is public chain API and
+# silently consuming either operand would surprise callers holding a ref.
+@functools.partial(
+    jax.jit,
+    static_argnames=("mesh", "algorithm", "row_axis", "col_axis"),
+)
+def _sharded_mm_step(x, y, *, mesh, algorithm, row_axis, col_axis):
+    return sharded_matmul(x, y, mesh, algorithm=algorithm,
+                          row_axis=row_axis, col_axis=col_axis)
+
+
+class ShardedMatmulChain(PaddedChain):
+    """Distributed analogue of ``ops.MatmulChain``: pad once, donated
+    collective squarings on the resident 2-D-sharded operand, unpad once.
+
+    Before this class the distributed path re-materialized the sharded
+    operand every squaring: each ``sharded_matmul`` call resharded its
+    inputs, allocated a fresh output, and (for non-divisible sizes) could
+    not run at all, while the single-device chain already had pad-once /
+    donate / unpad-once semantics. This object gives the mesh path the same
+    contract (shared via :class:`~repro.kernels.ops.PaddedChain`):
+
+        chain = ShardedMatmulChain(a.shape[-1], a.dtype, mesh)
+        x = chain.pad(a)           # ONE pad to mesh multiples + placement
+        x = chain.square(x)        # k times: donated collective squarings,
+        ...                        #   each device reuses its HBM shard
+        out = chain.unpad(result)  # ONE slice back to (n, n)
+
+    * ``pad`` zero-pads (n, n) up to the chain's ``padded_n`` — the smallest
+      multiple of ``lcm(rows, cols) * shard_multiple`` >= n, so every shard
+      is even (a ``shard_map`` requirement) and, on TPU, 128-aligned — and
+      commits the operand to ``NamedSharding(mesh, P(row_axis, col_axis))``.
+      Zero-padding is closed under multiplication, so the whole chain runs
+      on the padded buffer.
+    * ``square`` CONSUMES its argument when called eagerly (buffer
+      donation): each device's output shard reuses the HBM of its input
+      shard. Under an outer trace (jit / fori_loop bodies) donation is inert
+      and the step inlines into the surrounding program as a plain
+      collective matmul.
+    * ``algorithm="auto"`` resolves per mesh shape at construction
+      (Cannon on square multi-device meshes, all-gather otherwise), so every
+      step of one chain runs the same schedule.
+
+    Used by :func:`matpow_sharded` and :func:`expm_sharded`.
+    """
+
+    def __init__(self, n: int, dtype, mesh: Mesh, *, algorithm: str = "auto",
+                 row_axis: str = "data", col_axis: str = "model",
+                 shard_multiple: Optional[int] = None, donate: bool = True):
+        super().__init__(n, dtype, donate=donate)
+        self.mesh = mesh
+        self.row_axis = row_axis
+        self.col_axis = col_axis
+        rows, cols = _mesh_axis_sizes(mesh, row_axis, col_axis)
+        self.algorithm = _pick_algorithm(algorithm, rows, cols)
+        if shard_multiple is None:
+            # Per-shard dims should stay MXU-aligned on TPU; on CPU meshes
+            # (tests, local development) any even shard works.
+            shard_multiple = 128 if jax.default_backend() == "tpu" else 1
+        step = math.lcm(rows, cols) * int(shard_multiple)
+        self.padded_n = (self.n + step - 1) // step * step
+        self.sharding = NamedSharding(mesh, P(row_axis, col_axis))
+        self._static = dict(mesh=mesh, algorithm=self.algorithm,
+                            row_axis=row_axis, col_axis=col_axis)
+
+    # -- chain boundary ----------------------------------------------------
+    def pad(self, a: jax.Array) -> jax.Array:
+        """Pad (n, n) -> (P, P) and commit the chain's 2-D sharding. ONCE.
+
+        The committed ``NamedSharding(mesh, P(row, col))`` is what makes the
+        donated squaring steps alias in place: input and output shards have
+        identical layouts, so XLA reuses each device's buffer. The base-class
+        contract (defensive copy when padding is a no-op and donation is on)
+        protects the caller's buffer from being consumed by ``square``.
+        """
+        if a.ndim != 2:
+            raise ValueError(
+                f"sharded chains are 2-D only, got shape {a.shape}")
+        a = super().pad(a)
+        if isinstance(a, jax.core.Tracer):
+            return lax.with_sharding_constraint(a, self.sharding)
+        return jax.device_put(a, self.sharding)
+
+    # -- chain body (operand already padded + placed) ----------------------
+    def mm(self, x: jax.Array, y: jax.Array) -> jax.Array:
+        """x @ y on the padded sharded buffers (combine step; no donation)."""
+        if isinstance(x, jax.core.Tracer) or isinstance(y, jax.core.Tracer):
+            return sharded_matmul(x, y, self.mesh, algorithm=self.algorithm,
+                                  row_axis=self.row_axis,
+                                  col_axis=self.col_axis)
+        return _sharded_mm_step(x, y, **self._static)
+
+    def square(self, x: jax.Array) -> jax.Array:
+        """x @ x as one collective step; CONSUMES x when eager (donation).
+
+        Eager calls go through the donated jitted step — each device's
+        output shard reuses its input shard's HBM. Traced calls (inside an
+        outer jit / lax loop) go straight to the collective matmul: donation
+        is inert there and the extra pjit boundary would only block fusion.
+        """
+        if self.donate and not isinstance(x, jax.core.Tracer):
+            return _sharded_square_step(x, **self._static)
+        return sharded_matmul(x, x, self.mesh, algorithm=self.algorithm,
+                              row_axis=self.row_axis, col_axis=self.col_axis)
 
 
 def matpow_sharded(a: jax.Array, n: int, mesh: Mesh, *, algorithm: str = "auto",
                    row_axis: str = "data", col_axis: str = "model") -> jax.Array:
     """A^n with A 2-D resident-sharded; ceil(log2 n) collective matmuls.
 
-    The paper's squaring chain at mesh scale: one jit program, A never leaves
-    the devices, each squaring/combine is one collective matmul.
+    The paper's squaring chain at mesh scale, routed through
+    :class:`ShardedMatmulChain`: the operand is padded to mesh multiples and
+    committed to its ``P(row_axis, col_axis)`` sharding exactly ONCE, every
+    squaring is one donated collective step (each device reuses its HBM
+    shard — A never leaves the devices), the popcount(n)-1 combines run
+    un-donated, and the result is sliced back to (n, n) once at exit.
+    Arbitrary n x n sizes are supported (the chain pads non-divisible sizes;
+    the bare :func:`sharded_matmul` requires even shards).
+
+    Args:
+      a: (n, n) operand. Called eagerly, ``a`` is never consumed (the chain
+        squares a padded buffer or a defensive copy, not the caller's).
+      n: static python int >= 0 (``n == 0`` returns the sharded identity).
+      mesh: the device mesh to keep A resident on.
+      algorithm: ``"auto"`` | ``"cannon"`` | ``"gather"`` — the collective
+        schedule for every step (auto-picked per mesh shape).
+      row_axis, col_axis: mesh axis names for A's two dims.
+
+    Returns:
+      A^n, 2-D sharded over the mesh like the input.
     """
     if not isinstance(n, int) or n < 0:
         raise ValueError("matpow_sharded requires a static python int n >= 0")
-    mm = functools.partial(sharded_matmul, mesh=mesh, algorithm=algorithm,
-                           row_axis=row_axis, col_axis=col_axis)
+    chain = ShardedMatmulChain(a.shape[-1], a.dtype, mesh,
+                               algorithm=algorithm, row_axis=row_axis,
+                               col_axis=col_axis)
     if n == 0:
-        eye = jnp.eye(a.shape[-1], dtype=a.dtype)
-        return jax.device_put(eye, NamedSharding(mesh, P(row_axis, col_axis)))
+        # Build the identity at the chain's padded size so the even-shard
+        # placement always succeeds, then slice back — non-divisible n would
+        # otherwise crash the device_put.
+        eye = jnp.eye(chain.padded_n, dtype=a.dtype)
+        return chain.unpad(jax.device_put(eye, chain.sharding))
+    base = chain.pad(a)
     result = None
-    base = a
     while True:
         if n & 1:
-            result = base if result is None else mm(result, base)
+            if result is None:
+                # chain.square donates base; when squarings remain, seed the
+                # result from a cheap O(n^2) copy instead of aliasing it.
+                result = base if n == 1 else jnp.copy(base)
+            else:
+                result = chain.mm(result, base)
         n >>= 1
         if n == 0:
             break
-        base = mm(base, base)
-    return result
+        base = chain.square(base)
+    return chain.unpad(result)
+
+
+def expm_sharded(a: jax.Array, mesh: Mesh, *, max_squarings: int = 32,
+                 algorithm: str = "auto", row_axis: str = "data",
+                 col_axis: str = "model") -> jax.Array:
+    """Matrix exponential e^A with A 2-D-sharded — the scientific workload
+    at mesh scale.
+
+    Same scaling-and-squaring structure as :func:`repro.core.expm.expm`
+    (Pade-13 + data-dependent squarings), with the squaring chain routed
+    through :class:`ShardedMatmulChain`: the Pade result is padded and
+    committed to its 2-D sharding ONCE, then squared ``s`` times inside a
+    ``lax.fori_loop`` as collective matmuls over the mesh (donation is inert
+    under the loop trace; XLA's own buffer reuse applies). The small fixed
+    Pade polynomial (6 matmuls + one solve) is not a chain — it stays on
+    GSPMD-partitioned XLA ops, and the solve gathers: it is O(1) in the
+    squaring count, which is where the mesh residency matters.
+
+    Args:
+      a: (n, n) operand (2-D only — the sharded chain has no batch path).
+      mesh / algorithm / row_axis / col_axis: as :func:`matpow_sharded`.
+      max_squarings: clip on the data-dependent squaring count.
+
+    Returns:
+      e^A in ``a.dtype``, 2-D sharded over the mesh.
+    """
+    # Deferred: repro.core.expm imports repro.core.matpow at module load;
+    # importing it lazily keeps distributed importable on its own.
+    from repro.core.expm import _pade13, _THETA13
+
+    if a.ndim != 2 or a.shape[-1] != a.shape[-2]:
+        raise ValueError(f"expm_sharded needs one square matrix, got {a.shape}")
+    dtype = a.dtype
+    compute = a.astype(jnp.float64 if dtype == jnp.float64 else jnp.float32)
+
+    norm = jnp.linalg.norm(compute, ord=1, axis=(-2, -1), keepdims=True)
+    s = jnp.maximum(0.0, jnp.ceil(jnp.log2(norm / _THETA13)))
+    s = jnp.minimum(s, float(max_squarings)).astype(jnp.int32)
+    scaled = compute / (2.0 ** s.astype(compute.dtype))
+
+    ident = jnp.eye(a.shape[-1], dtype=compute.dtype)
+    u, v = _pade13(scaled, ident)
+    r = jnp.linalg.solve(v - u, v + u)
+
+    # Squarings always run inside the fori_loop (traced) — donation never
+    # fires, so skip the donate-enabled chain's defensive pad-time copy.
+    chain = ShardedMatmulChain(a.shape[-1], compute.dtype, mesh,
+                               algorithm=algorithm, row_axis=row_axis,
+                               col_axis=col_axis, donate=False)
+    r = chain.pad(r)
+
+    def body(i, r_cur):
+        sq = chain.square(r_cur)
+        keep = (i < s).astype(compute.dtype)   # (1, 1) mask, broadcasts
+        return keep * sq + (1.0 - keep) * r_cur
+
+    r = lax.fori_loop(0, jnp.max(s), body, r)
+    return chain.unpad(r).astype(dtype)

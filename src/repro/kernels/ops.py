@@ -37,7 +37,7 @@ from repro.kernels.matmul import (matmul_pallas, square_pallas, DEFAULT_BLOCK,
                                   SQUARE_VMEM_LIMIT)
 
 __all__ = ["matmul", "square", "attention", "dense_matmul", "pick_blocks",
-           "pick_attn_blocks", "pad_to_blocks", "MatmulChain",
+           "pick_attn_blocks", "pad_to_blocks", "PaddedChain", "MatmulChain",
            "pallas_supported"]
 
 
@@ -300,15 +300,60 @@ def _square_step_ref(a):
     return _ref.matmul_ref(a, a)
 
 
-class MatmulChain:
+class PaddedChain:
+    """Pad-once / unpad-once plumbing shared by the chain executors.
+
+    A chain of k same-shape square multiplies needs exactly ONE pad at entry
+    and ONE un-pad at exit — zero-padding is closed under multiplication
+    ([[A,0],[0,0]]^2 = [[A^2,0],[0,0]]) — so every chain executor (the
+    single-device ``MatmulChain`` here, the mesh-sharded
+    ``core.distributed.ShardedMatmulChain``) shares this boundary contract:
+
+        x = chain.pad(a)            # once: (..., n, n) -> (..., P, P)
+        x = chain.square(x)         # k times on the padded buffer
+        out = chain.unpad(result)   # once: strip back to (..., n, n)
+
+    Subclasses set ``self.padded_n`` (the chain-invariant padded size P) in
+    their ``__init__`` and implement ``square``/``mm``. ``donate`` records
+    whether eager squarings consume their operand's buffer; ``pad`` honors it
+    by never handing the caller's own buffer into the chain.
+    """
+
+    def __init__(self, n: int, dtype, *, donate: bool = True):
+        self.n = int(n)
+        self.dtype = jnp.dtype(dtype)
+        self.donate = bool(donate)
+        self.padded_n = self.n
+
+    # -- chain boundary ----------------------------------------------------
+    def pad(self, a: jax.Array) -> jax.Array:
+        """Zero-pad (..., n, n) -> (..., P, P). Called once per chain.
+
+        When padding is a no-op (already divisible, or inactive chain) and
+        donation is on, an EAGER caller gets a copy instead of its own array
+        back: ``square`` consumes its operand, and the chain must never
+        consume the caller's buffer. Under a trace the copy is elided by XLA.
+        """
+        if self.padded_n != self.n:
+            return pad_to_blocks(a, self.padded_n, self.padded_n)
+        if self.donate and not isinstance(a, jax.core.Tracer):
+            return jnp.copy(a)
+        return a
+
+    def unpad(self, c: jax.Array) -> jax.Array:
+        """Strip back to (..., n, n). Called once per chain."""
+        if self.padded_n == self.n:
+            return c
+        return c[..., : self.n, : self.n]
+
+
+class MatmulChain(PaddedChain):
     """Fused executor for a chain of same-shape square multiplies.
 
     The seed implementation paid ``ops.matmul``'s full entry cost on every
     multiply of a squaring chain: re-pick blocks, re-pad both operands,
-    re-strip the padding, re-dispatch vmap. A chain of k multiplies on one
-    (n, n) operand needs exactly ONE pad and ONE un-pad — zero-padding is
-    closed under multiplication ([[A,0],[0,0]]^2 = [[A^2,0],[0,0]]) — so this
-    object hoists all of that to the chain boundary:
+    re-strip the padding, re-dispatch vmap. This object hoists all of that
+    to the chain boundary (see :class:`PaddedChain`):
 
         chain = MatmulChain(a.shape[-1], a.dtype, interpret=...)
         x = chain.pad(a)            # once
@@ -326,10 +371,8 @@ class MatmulChain:
 
     def __init__(self, n: int, dtype, *, interpret: bool = False,
                  blocks=None, donate: bool = True):
-        self.n = int(n)
-        self.dtype = jnp.dtype(dtype)
+        super().__init__(n, dtype, donate=donate)
         self.interpret = bool(interpret)
-        self.donate = bool(donate)
         self.active = self.interpret or pallas_supported()
         if self.active:
             self.blocks, self.padded_n = _square_blocks(self.n, self.dtype,
@@ -339,29 +382,7 @@ class MatmulChain:
             self.tiers = _square_tiers(self.dtype)
         else:
             self.blocks = None
-            self.padded_n = self.n
             self.tiers = None
-
-    # -- chain boundary ----------------------------------------------------
-    def pad(self, a: jax.Array) -> jax.Array:
-        """Zero-pad (..., n, n) -> (..., P, P). Called once per chain.
-
-        When padding is a no-op (already block-divisible, or inactive chain)
-        and donation is on, an EAGER caller gets a copy instead of its own
-        array back: ``square`` consumes its operand, and the chain must never
-        consume the caller's buffer. Under a trace the copy is elided by XLA.
-        """
-        if self.active and self.padded_n != self.n:
-            return pad_to_blocks(a, self.padded_n, self.padded_n)
-        if self.donate and not isinstance(a, jax.core.Tracer):
-            return jnp.copy(a)
-        return a
-
-    def unpad(self, c: jax.Array) -> jax.Array:
-        """Strip back to (..., n, n). Called once per chain."""
-        if not self.active or self.padded_n == self.n:
-            return c
-        return c[..., : self.n, : self.n]
 
     # -- chain body (operands already padded) ------------------------------
     def mm(self, x: jax.Array, y: jax.Array) -> jax.Array:

@@ -184,6 +184,41 @@ def _maybe_ckpt_body(body, enable: bool):
                           policy=jax.checkpoint_policies.nothing_saveable)
 
 
+# Historical static chunk sizes — the fallback when the tuner cannot help.
+_DEFAULT_Q_CHUNK, _DEFAULT_KV_CHUNK = 512, 1024
+
+
+def _pick_chunks(sq: int, skv: int, d: int, dtype):
+    """Tuned (q_chunk, kv_chunk) for the portable chunked-attention path.
+
+    When the ``attention`` namespace of the persistent tuning cache has an
+    entry for this (sq, skv, d) problem — the same entries hardware sweeps
+    record for the Pallas flash kernel's ``block_q``/``block_k`` — resolve
+    it through ``ops.pick_attn_blocks`` so the portable scan path inherits
+    tuned chunk sizes (``docs/autotuning.md``). The chunk scan pads ragged
+    lengths itself, so a tuned tile that does not divide the sequence is
+    still usable.
+
+    UNTUNED problems keep the historical static chunks (512, 1024): the
+    picker's heuristic models the Pallas kernel's VMEM working set, which
+    says nothing about the XLA scan, and silently shrinking every untuned
+    install's chunks (more scan steps) would be a regression. This path
+    never raises for shapes the scan can handle.
+
+    Resolution happens at trace time (shapes are static), so a cache update
+    takes effect on the next retrace, not mid-program.
+    """
+    from repro.kernels import autotune
+    try:
+        if autotune.lookup(sq, skv, d, dtype=dtype,
+                           kernel="attention") is not None:
+            bq, bk = _kops.pick_attn_blocks(sq, skv, d, dtype=dtype)
+            return int(bq), int(bk)
+    except ValueError:
+        pass
+    return _DEFAULT_Q_CHUNK, _DEFAULT_KV_CHUNK
+
+
 @_scoped("flash_attention_core")
 def _online_chunk_attention(q, k, v, *, causal: bool, q_offset: int,
                             q_chunk: int, kv_chunk: int,
@@ -388,9 +423,16 @@ def write_kv_cache(k_cache, v_cache, k_new, v_new, pos):
 def attention_block(cfg: ArchConfig, p, x, *, sctx: ShardCtx = NO_SHARD,
                     positions=None, kv_cache=None, cache_write: bool = True,
                     use_rope: bool = True, causal: Optional[bool] = None,
-                    kv_override=None, q_chunk: int = 512,
-                    kv_chunk: int = 1024):
+                    kv_override=None, q_chunk: Optional[int] = None,
+                    kv_chunk: Optional[int] = None):
     """GQA attention. x: (B,S,D).
+
+    ``q_chunk``/``kv_chunk`` default to ``None`` — resolved from the
+    ``attention`` namespace of the persistent tuning cache when an entry
+    exists (via ``ops.pick_attn_blocks``, mirroring how the Pallas flash
+    kernel resolves ``block_q``/``block_k``), and the historical static
+    512/1024 otherwise. Pass explicit ints to pin the chunking (tests,
+    memory-constrained traces); they are honored exactly.
 
     Modes:
       * prefill/train: kv_cache is None -> returns (out, (k, v)) where k/v
@@ -442,6 +484,10 @@ def attention_block(cfg: ArchConfig, p, x, *, sctx: ShardCtx = NO_SHARD,
         aux_kv = (k_cache, v_cache)
     else:
         q_off = k.shape[1] - s
+        if q_chunk is None or kv_chunk is None:
+            tuned_q, tuned_kv = _pick_chunks(s, k.shape[1], dh, x.dtype)
+            q_chunk = tuned_q if q_chunk is None else q_chunk
+            kv_chunk = tuned_kv if kv_chunk is None else kv_chunk
         if cfg.sliding_window is not None and causal and \
                 k.shape[1] > cfg.sliding_window:
             out = _banded_window_attention(

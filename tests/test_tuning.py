@@ -355,3 +355,106 @@ class TestDenseConsultsCache:
         assert y.shape == (2, 3, 5, 16)
         np.testing.assert_allclose(np.asarray(y), np.asarray(want),
                                    rtol=1e-4, atol=1e-4)
+
+
+class TestModelChunksConsultCache:
+    """The portable chunked-attention path (models.layers) resolves its
+    q_chunk/kv_chunk through ops.pick_attn_blocks — the same ``attention``
+    cache namespace the Pallas flash kernel consults (ROADMAP item)."""
+
+    def _cfg(self):
+        from repro.configs import get_config
+        return get_config("qwen3-1.7b", smoke=True)
+
+    def test_pick_chunks_returns_cache_entry(self, tmp_cache):
+        from repro.models import layers
+        autotune.record(256, 256, 64, (128, 128), kernel="attention",
+                        dtype=jnp.float32)
+        assert layers._pick_chunks(256, 256, 64, jnp.float32) == (128, 128)
+
+    def test_pick_chunks_cache_miss_keeps_historical_defaults(self,
+                                                              tmp_cache):
+        """An UNTUNED problem must keep the static (512, 1024) — the
+        picker's VMEM heuristic models the Pallas kernel, not the scan, and
+        must not silently shrink untuned installs' chunks."""
+        from repro.models import layers
+        assert layers._pick_chunks(4096, 4096, 64, jnp.float32) == \
+            (layers._DEFAULT_Q_CHUNK, layers._DEFAULT_KV_CHUNK)
+
+    def test_pick_chunks_falls_back_when_picker_raises(self, tmp_cache,
+                                                       monkeypatch):
+        """Even with a recorded entry, a picker that cannot produce ANY
+        tiling (ValueError) degrades to the static chunks — the portable
+        path must never raise for shapes the scan handles."""
+        from repro.models import layers
+        autotune.record(333, 333, 64, (128, 128), kernel="attention",
+                        dtype=jnp.float32)
+
+        def boom(*a, **k):
+            raise ValueError("no usable tiling")
+
+        monkeypatch.setattr(layers._kops, "pick_attn_blocks", boom)
+        assert layers._pick_chunks(333, 333, 64, jnp.float32) == \
+            (layers._DEFAULT_Q_CHUNK, layers._DEFAULT_KV_CHUNK)
+
+    def test_attention_block_observes_preseeded_entry(self, tmp_cache,
+                                                      monkeypatch):
+        """Pre-seed an attention cache entry; the model block's chunked
+        scan must run with exactly those chunk sizes."""
+        from repro.models import layers
+        cfg = self._cfg()
+        s, dh = 256, cfg.d_head
+        autotune.record(s, s, dh, (128, 128), kernel="attention",
+                        dtype=jnp.float32)
+
+        seen = {}
+        real = layers._online_chunk_attention
+
+        def spy(q, k, v, **kw):
+            seen["q_chunk"] = kw["q_chunk"]
+            seen["kv_chunk"] = kw["kv_chunk"]
+            return real(q, k, v, **kw)
+
+        monkeypatch.setattr(layers, "_online_chunk_attention", spy)
+        key = jax.random.PRNGKey(0)
+        p = layers.init_attention(key, cfg)
+        x = _rand((1, s, cfg.d_model), seed=22, scale=0.1)
+        layers.attention_block(cfg, p, x)
+        assert (seen["q_chunk"], seen["kv_chunk"]) == (128, 128)
+
+    def test_attention_block_explicit_chunks_win(self, tmp_cache,
+                                                 monkeypatch):
+        """Explicit ints bypass the tuner entirely (pinned chunking)."""
+        from repro.models import layers
+        cfg = self._cfg()
+        autotune.record(64, 64, cfg.d_head, (128, 128), kernel="attention",
+                        dtype=jnp.float32)
+
+        seen = {}
+        real = layers._online_chunk_attention
+
+        def spy(q, k, v, **kw):
+            seen["q_chunk"] = kw["q_chunk"]
+            seen["kv_chunk"] = kw["kv_chunk"]
+            return real(q, k, v, **kw)
+
+        monkeypatch.setattr(layers, "_online_chunk_attention", spy)
+        p = layers.init_attention(jax.random.PRNGKey(0), cfg)
+        x = _rand((1, 64, cfg.d_model), seed=23, scale=0.1)
+        layers.attention_block(cfg, p, x, q_chunk=32, kv_chunk=16)
+        assert (seen["q_chunk"], seen["kv_chunk"]) == (32, 16)
+
+    def test_tuned_chunks_numerics_match_pinned(self, tmp_cache):
+        """Chunk size is a scheduling choice — online softmax is exact, so
+        tuned and pinned chunking must agree bit-for-bit-ish."""
+        from repro.models import layers
+        cfg = self._cfg()
+        s = 192
+        autotune.record(s, s, cfg.d_head, (128, 128), kernel="attention",
+                        dtype=jnp.float32)
+        p = layers.init_attention(jax.random.PRNGKey(1), cfg)
+        x = _rand((2, s, cfg.d_model), seed=24, scale=0.1)
+        got, _ = layers.attention_block(cfg, p, x)
+        want, _ = layers.attention_block(cfg, p, x, q_chunk=64, kv_chunk=64)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-4, atol=1e-5)
