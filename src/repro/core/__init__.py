@@ -14,6 +14,11 @@ from repro.core.matpow import (
     chain_for,
 )
 from repro.core.expm import expm
+from repro.core.batched import (
+    BatchedMatmulChain,
+    batched_matpow,
+    batched_expm,
+)
 from repro.core.scan import prefix_scan, prefix_products, decay_prefix
 from repro.core.distributed import (
     matmul_2d_gather,
@@ -27,7 +32,8 @@ from repro.core.distributed import (
 __all__ = [
     "matpow_naive", "matpow_binary", "matpow_binary_traced", "matmul_backend",
     "chain_for",
-    "expm", "prefix_scan", "prefix_products", "decay_prefix",
+    "expm", "BatchedMatmulChain", "batched_matpow", "batched_expm",
+    "prefix_scan", "prefix_products", "decay_prefix",
     "matmul_2d_gather", "matmul_cannon", "sharded_matmul",
     "ShardedMatmulChain", "matpow_sharded", "expm_sharded",
 ]

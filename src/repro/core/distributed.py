@@ -40,6 +40,7 @@ from jax import lax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
+from repro.kernels import ops as _kops
 from repro.kernels.ops import PaddedChain
 
 __all__ = [
@@ -283,15 +284,29 @@ class ShardedMatmulChain(PaddedChain):
         The committed ``NamedSharding(mesh, P(row, col))`` is what makes the
         donated squaring steps alias in place: input and output shards have
         identical layouts, so XLA reuses each device's buffer. The base-class
-        contract (defensive copy when padding is a no-op and donation is on)
-        protects the caller's buffer from being consumed by ``square``.
+        contract (never hand the caller's own buffer into the chain) is
+        honored with a defensive copy only when ``device_put`` could return
+        that buffer — an operand whose placement is already *equivalent* to
+        the chain's sharding (``Sharding.is_equivalent_to``: same devices
+        and partitioning, e.g. a single-device array entering a 1x1-mesh
+        chain, or one already committed to the chain's NamedSharding).
+        Every other case (padding, real resharding) allocates fresh buffers
+        anyway, and the copy would be a pure O(n^2) waste on exactly the
+        huge single matrices the serving engine routes here.
         """
         if a.ndim != 2:
             raise ValueError(
                 f"sharded chains are 2-D only, got shape {a.shape}")
-        a = super().pad(a)
         if isinstance(a, jax.core.Tracer):
-            return lax.with_sharding_constraint(a, self.sharding)
+            return lax.with_sharding_constraint(super().pad(a), self.sharding)
+        if self.padded_n != self.n:
+            # Through the module attr (not a direct name) so the pad-count
+            # instrumentation in tests — and any future wrapping of
+            # ops.pad_to_blocks — observes the chain boundary.
+            a = _kops.pad_to_blocks(a, self.padded_n, self.padded_n)
+        elif self.donate and getattr(a, "sharding", None) is not None \
+                and a.sharding.is_equivalent_to(self.sharding, a.ndim):
+            a = jnp.copy(a)
         return jax.device_put(a, self.sharding)
 
     # -- chain body (operand already padded + placed) ----------------------
@@ -353,21 +368,12 @@ def matpow_sharded(a: jax.Array, n: int, mesh: Mesh, *, algorithm: str = "auto",
         # otherwise crash the device_put.
         eye = jnp.eye(chain.padded_n, dtype=a.dtype)
         return chain.unpad(jax.device_put(eye, chain.sharding))
-    base = chain.pad(a)
-    result = None
-    while True:
-        if n & 1:
-            if result is None:
-                # chain.square donates base; when squarings remain, seed the
-                # result from a cheap O(n^2) copy instead of aliasing it.
-                result = base if n == 1 else jnp.copy(base)
-            else:
-                result = chain.mm(result, base)
-        n >>= 1
-        if n == 0:
-            break
-        base = chain.square(base)
-    return chain.unpad(result)
+    # Deferred for the same reason as expm_sharded's expm import: keeps
+    # this module importable on its own. The squaring/combine loop —
+    # including the donation-aware result seeding — is shared with the
+    # single-device and batched chains, so a fix lands in every executor.
+    from repro.core.matpow import _binary_chain_body
+    return chain.unpad(_binary_chain_body(chain.pad(a), n, chain))
 
 
 def expm_sharded(a: jax.Array, mesh: Mesh, *, max_squarings: int = 32,
@@ -398,8 +404,9 @@ def expm_sharded(a: jax.Array, mesh: Mesh, *, max_squarings: int = 32,
     # importing it lazily keeps distributed importable on its own.
     from repro.core.expm import _pade13, _THETA13
 
-    if a.ndim != 2 or a.shape[-1] != a.shape[-2]:
-        raise ValueError(f"expm_sharded needs one square matrix, got {a.shape}")
+    if a.ndim != 2 or a.shape[-1] != a.shape[-2] or a.shape[-1] < 1:
+        raise ValueError(f"expm_sharded needs one square matrix with n >= 1, "
+                         f"got {a.shape}")
     dtype = a.dtype
     compute = a.astype(jnp.float64 if dtype == jnp.float64 else jnp.float32)
 

@@ -58,8 +58,10 @@ def expm(a: jax.Array, *, max_squarings: int = 32,
     kernel, and un-pads once at the end. The small fixed Pade polynomial
     (6 matmuls + one solve) stays on XLA — it is not a chain.
     """
-    if a.shape[-1] != a.shape[-2]:
+    if a.ndim < 2 or a.shape[-1] != a.shape[-2]:
         raise ValueError(f"expm needs square matrices, got {a.shape}")
+    if a.shape[-1] < 1:
+        raise ValueError(f"expm needs matrices with n >= 1, got {a.shape}")
     dtype = a.dtype
     compute = a.astype(jnp.float64 if dtype == jnp.float64 else jnp.float32)
 

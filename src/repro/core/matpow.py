@@ -103,6 +103,11 @@ def _accum_dtype(dtype) -> jnp.dtype:
 def _check_square(a: jax.Array) -> int:
     if a.ndim < 2 or a.shape[-1] != a.shape[-2]:
         raise ValueError(f"matpow needs square matrices, got shape {a.shape}")
+    if a.shape[-1] < 1:
+        # Every op on a 0-size matrix is an empty-array no-op, so the chain
+        # would silently return identity-shaped garbage; fail loudly instead.
+        raise ValueError(f"matpow needs matrices with n >= 1, got shape "
+                         f"{a.shape}")
     return a.shape[-1]
 
 

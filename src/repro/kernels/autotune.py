@@ -20,6 +20,12 @@ Namespaces (the ``kernel`` key segment):
   * ``square_panel`` — the VMEM tier thresholds of ``square_pallas``
                        (whole-operand-resident limit, panel-resident limit);
                        consulted by ``square_tiers``.
+  * ``dispatch``     — the matrix-size thresholds of the serving engine's
+                       heterogeneous dispatch (largest n kept on the CPU/XLA
+                       route, smallest single-matrix n promoted to the
+                       sharded chain); consulted by ``dispatch_thresholds``
+                       (``repro.serve.matfn``), so hardware sweeps can
+                       retune where each bucket runs.
 
 Shared machinery:
 
@@ -66,12 +72,14 @@ __all__ = [
     "modeled_attn_score", "sweep_attention",
     "DEFAULT_SQUARE_TIERS", "square_tiers", "record_square_tiers",
     "sweep_square_tiers",
+    "DEFAULT_DISPATCH_THRESHOLDS", "dispatch_thresholds",
+    "record_dispatch_thresholds",
 ]
 
 _ENV_VAR = "REPRO_AUTOTUNE_CACHE"
 
 #: Kernel namespaces the cache knows about (the first segment of every key).
-KERNELS = ("matmul", "attention", "square_panel")
+KERNELS = ("matmul", "attention", "square_panel", "dispatch")
 
 #: Default VMEM working-set budget shared by ops.pick_blocks and the sweep
 #: scorer — ONE definition so the heuristic and the cache never disagree.
@@ -120,6 +128,15 @@ DEFAULT_ATTN_CANDIDATES: tuple = (
 #: through the ``square_panel`` cache namespace (``square_tiers``).
 DEFAULT_SQUARE_TIERS: tuple = (SQUARE_VMEM_LIMIT, SQUARE_PANEL_LIMIT)
 
+#: Default heterogeneous-dispatch thresholds ``(cpu_max_n, sharded_min_n)``
+#: for the matrix-function serving engine: buckets with n <= cpu_max_n run
+#: the plain XLA route (kernel-launch overhead dominates tiny matmuls —
+#: the paper's "CPU side" of the heterogeneous split), single matrices with
+#: n >= sharded_min_n are promoted to ``ShardedMatmulChain`` when a mesh is
+#: available, everything between runs the fused Pallas chain. Overridable
+#: per backend/dtype through the ``dispatch`` cache namespace.
+DEFAULT_DISPATCH_THRESHOLDS: tuple = (64, 4096)
+
 # In-memory image of each cache file, keyed by resolved path.
 _MEM: dict = {}
 
@@ -153,15 +170,27 @@ def _tiers_key(dtype=None, backend: Optional[str] = None) -> str:
     return f"square_panel/tiers/{d}/{b}"
 
 
+def _dispatch_key(dtype=None, backend: Optional[str] = None) -> str:
+    d = jnp.dtype(dtype).name if dtype is not None else "any"
+    b = backend or jax.default_backend()
+    return f"dispatch/thresholds/{d}/{b}"
+
+
+def _ascending_pair(vals) -> bool:
+    return (len(vals) == 2
+            and all(isinstance(x, int) and x > 0 for x in vals)
+            and vals[0] <= vals[1])
+
+
 def _valid_entry(entry) -> bool:
     """A usable cache entry: a block tiling (len 2 for attention, len 3 for
-    matmul) or a ``square_panel`` tier pair (two ascending positive ints)."""
+    matmul), a ``square_panel`` tier pair, or a ``dispatch`` threshold pair
+    (both: two ascending positive ints)."""
     try:
         if "tiers" in entry:
-            tiers = entry["tiers"]
-            return (len(tiers) == 2
-                    and all(isinstance(x, int) and x > 0 for x in tiers)
-                    and tiers[0] <= tiers[1])
+            return _ascending_pair(entry["tiers"])
+        if "thresholds" in entry:
+            return _ascending_pair(entry["thresholds"])
         blocks = entry["blocks"]
         return (len(blocks) in (2, 3)
                 and all(isinstance(x, int) and x > 0 for x in blocks))
@@ -290,6 +319,45 @@ def record_square_tiers(whole_limit: int, panel_limit: int, dtype=None,
     cache = load_cache()
     cache[_tiers_key(dtype, backend)] = {
         "tiers": [int(whole_limit), int(panel_limit)],
+        "measured": bool(measured),
+    }
+    if save:
+        save_cache(cache)
+
+
+def dispatch_thresholds(dtype=None, backend: Optional[str] = None) -> tuple:
+    """(cpu_max_n, sharded_min_n) for the serving engine's heterogeneous
+    dispatch (``repro.serve.matfn``).
+
+    Consults the ``dispatch`` cache namespace (dtype-specific entry first,
+    then dtype-agnostic) and falls back to ``DEFAULT_DISPATCH_THRESHOLDS``.
+    Resolution happens outside any jit, so a retuned entry takes effect on
+    the engine's next bucket instead of being baked into a stale executable.
+    """
+    cache = load_cache()
+    for key in (_dispatch_key(dtype, backend), _dispatch_key(None, backend)):
+        entry = cache.get(key)
+        if entry is not None and _valid_entry(entry) and "thresholds" in entry:
+            return tuple(entry["thresholds"])
+    return DEFAULT_DISPATCH_THRESHOLDS
+
+
+def record_dispatch_thresholds(cpu_max_n: int, sharded_min_n: int, dtype=None,
+                               backend: Optional[str] = None,
+                               measured: bool = False,
+                               save: bool = True) -> None:
+    """Store tuned heterogeneous-dispatch thresholds (matrix sizes).
+
+    ``measured`` records provenance exactly like the block namespaces:
+    hardware sweeps that timed real crossovers record ``True`` so the
+    modeled defaults can be invalidated wholesale.
+    """
+    if not (0 < cpu_max_n <= sharded_min_n):
+        raise ValueError(f"dispatch thresholds must be ascending positive "
+                         f"ints, got ({cpu_max_n}, {sharded_min_n})")
+    cache = load_cache()
+    cache[_dispatch_key(dtype, backend)] = {
+        "thresholds": [int(cpu_max_n), int(sharded_min_n)],
         "measured": bool(measured),
     }
     if save:

@@ -36,9 +36,9 @@ from repro.kernels import ref as _ref
 from repro.kernels.matmul import (matmul_pallas, square_pallas, DEFAULT_BLOCK,
                                   SQUARE_VMEM_LIMIT)
 
-__all__ = ["matmul", "square", "attention", "dense_matmul", "pick_blocks",
-           "pick_attn_blocks", "pad_to_blocks", "PaddedChain", "MatmulChain",
-           "pallas_supported"]
+__all__ = ["matmul", "square", "attention", "dense_matmul",
+           "dense_routing_active", "pick_blocks", "pick_attn_blocks",
+           "pad_to_blocks", "PaddedChain", "MatmulChain", "pallas_supported"]
 
 
 def pallas_supported() -> bool:
@@ -321,6 +321,12 @@ class PaddedChain:
 
     def __init__(self, n: int, dtype, *, donate: bool = True):
         self.n = int(n)
+        if self.n < 1:
+            # A 0-size chain would "work" — every pad/square/unpad is an
+            # empty-array no-op — and hand back identity-shaped garbage.
+            # Reject it here so every chain executor (single-device, batched,
+            # sharded) fails loudly at construction.
+            raise ValueError(f"chain matrices must have n >= 1, got n={n!r}")
         self.dtype = jnp.dtype(dtype)
         self.donate = bool(donate)
         self.padded_n = self.n
@@ -451,6 +457,23 @@ def _dense_mode() -> str:
     return os.environ.get("REPRO_DENSE_PALLAS", "auto")
 
 
+def dense_routing_active() -> bool:
+    """True when ``dense_matmul`` would route through the tiled kernel.
+
+    ``auto`` mode requires a TPU backend AND a single device: GSPMD has no
+    partitioning rule for the pallas_call, so on a multi-device mesh the
+    tuned-kernel route would gather/replicate what the einsum partitions.
+    Exposed so multi-matmul callers (``models.layers.moe_block``'s expert
+    einsums) can keep their single fused einsum whenever the projection
+    path would keep its einsum too, instead of splitting into per-expert
+    matmuls that then each fall back anyway.
+    """
+    mode = _dense_mode()
+    return (mode == "interpret"
+            or (mode == "auto" and pallas_supported()
+                and jax.device_count() == 1))
+
+
 @functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
 def _dense_2d(x2, w, blocks, interpret):
     return matmul(x2, w, interpret=interpret, blocks=blocks)
@@ -487,15 +510,12 @@ def dense_matmul(x: jax.Array, w: jax.Array) -> jax.Array:
     tuned-kernel route would gather/replicate what the einsum partitions —
     sharded training/serving keeps the einsum.
     """
-    mode = _dense_mode()
     m = math.prod(x.shape[:-1])
     k = x.shape[-1]
     n = w.shape[-1]
-    use_pallas = (mode == "interpret"
-                  or (mode == "auto" and pallas_supported()
-                      and jax.device_count() == 1))
-    if not use_pallas or m == 0:
+    if not dense_routing_active() or m == 0:
         return jnp.einsum("...d,df->...f", x, w)
     blocks = pick_blocks(m, n, k, dtype=x.dtype)
-    y = _dense_2d(x.reshape(m, k), w, tuple(blocks), mode == "interpret")
+    y = _dense_2d(x.reshape(m, k), w, tuple(blocks),
+                  _dense_mode() == "interpret")
     return y.reshape(*x.shape[:-1], n)

@@ -1,1 +1,5 @@
-"""repro.launch — mesh, dry-run, train and serve drivers."""
+"""repro.launch — mesh, dry-run, train, LM-serve and matfn-serve drivers.
+
+``python -m repro.launch.matserve`` drives mixed matrix-function traffic
+through the bucketing engine (``repro.serve.matfn``).
+"""

@@ -595,6 +595,25 @@ def _moe_dispatch_one(cfg: ArchConfig, p, x, cap: int):
     return buf, combine, probs
 
 
+def _expert_dense(t, w):
+    """Per-expert contraction ``becd,edf->becf`` (and ``becf,efd->becd`` —
+    the labels are positional) routed through ``ops.dense_matmul``.
+
+    When the tuned-kernel route is active, each expert's flattened
+    (B*cap, K) x (K, N) problem consults the same persistent tile cache as
+    every other projection and runs the tiled Pallas kernel (differentiable
+    through its custom VJP). When routing is off — off-TPU ``auto``,
+    multi-device meshes, ``REPRO_DENSE_PALLAS=off`` — the single fused
+    einsum is kept verbatim: GSPMD partitions it as one op, and a stack of
+    per-expert matmuls would each fall back to an einsum anyway while
+    fighting that partitioning.
+    """
+    if not _kops.dense_routing_active():
+        return jnp.einsum("becd,edf->becf", t, w)
+    return jnp.stack([_kops.dense_matmul(t[:, e], w[e])
+                      for e in range(w.shape[0])], axis=1)
+
+
 def moe_block(cfg: ArchConfig, p, x, *, sctx: ShardCtx = NO_SHARD,
               capacity_factor: Optional[float] = None):
     """Top-k MoE: per-sequence sort-based dispatch + batched expert GEMMs.
@@ -614,12 +633,12 @@ def moe_block(cfg: ArchConfig, p, x, *, sctx: ShardCtx = NO_SHARD,
     buf = dispatch(x)                                     # (B,E,cap,D)
     buf = sctx.shard(buf, sctx.dp, None, None, None)
 
-    h_gate = jnp.einsum("becd,edf->becf", buf, p["w_gate"].astype(x.dtype))
-    h_up = jnp.einsum("becd,edf->becf", buf, p["w_up"].astype(x.dtype))
+    h_gate = _expert_dense(buf, p["w_gate"].astype(x.dtype))
+    h_up = _expert_dense(buf, p["w_up"].astype(x.dtype))
     h_gate = sctx.shard(h_gate, sctx.dp, None, None, sctx.tp)
     h_up = sctx.shard(h_up, sctx.dp, None, None, sctx.tp)
     h = _act(h_gate, cfg.act) * h_up
-    y_buf = jnp.einsum("becf,efd->becd", h, p["w_down"].astype(x.dtype))
+    y_buf = _expert_dense(h, p["w_down"].astype(x.dtype))
     y_buf = sctx.shard(y_buf, sctx.dp, None, None, None)
 
     # Re-run the (cheap) routing math under vmap to rebuild combine indices —

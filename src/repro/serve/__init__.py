@@ -1,1 +1,10 @@
-"""repro.serve — batched prefill/decode engine."""
+"""repro.serve — serving layer.
+
+``engine``  — batched LM prefill/decode over the model stack.
+``matfn``   — the matrix-function serving engine: request bucketing,
+              batched squaring chains, heterogeneous dispatch.
+"""
+
+from repro.serve.matfn import MatFnEngine, MatFnRequest, bucket_batch
+
+__all__ = ["MatFnEngine", "MatFnRequest", "bucket_batch"]

@@ -1,0 +1,348 @@
+"""Matrix-function serving engine: request bucketing, batched squaring
+chains, and heterogeneous dispatch.
+
+The paper's headline pipeline keeps the accelerator saturated across
+matrices "of different sizes and with different powers". This module is
+that pipeline as a service layer over the reproduction's chain executors:
+
+  * **Requests** (:class:`MatFnRequest`) name an op (``matpow`` / ``expm``),
+    an (n, n) operand, and — for matpow — a static power.
+  * **Bucketing**: pending requests group by ``(op, n, dtype, power)``; each
+    group is stacked into a (B, n, n) operand whose batch dim is padded up
+    to the next power of two (identity work on zero-matrix filler slots), so
+    a handful of executables serves every batch size.
+  * **Executable cache**: each bucket answers from a compiled executable
+    keyed on ``(op, route, padded_batch, n, dtype, power)`` — one jitted
+    program per bucket shape, reused across flushes.
+  * **Heterogeneous dispatch**: the route per bucket follows the tuning
+    cache's ``dispatch`` namespace (:func:`repro.kernels.autotune.
+    dispatch_thresholds`): tiny n stays on the plain XLA dot (kernel-launch
+    overhead dominates — the paper's CPU side of the split), mid-size
+    buckets run the fused batched Pallas chain
+    (:class:`repro.core.batched.BatchedMatmulChain`), and huge *single*
+    matrices are promoted to :class:`~repro.core.distributed.
+    ShardedMatmulChain` when the engine owns a mesh. Hardware sweeps retune
+    the thresholds by writing the ``dispatch`` cache entry — no code change.
+
+Driver: ``python -m repro.launch.matserve``; bench:
+``benchmarks/matfn_bench.py`` (writes ``BENCH_matfn.json``). See
+``docs/serving.md`` for the policy details and the paper mapping.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.core.batched import batched_matpow
+from repro.core.expm import expm as _expm
+from repro.kernels import autotune
+
+__all__ = ["MatFnRequest", "MatFnEngine", "bucket_batch", "OPS", "ROUTES"]
+
+#: Ops the engine serves.
+OPS = ("matpow", "expm")
+
+#: Dispatch routes a bucket can take (see :meth:`MatFnEngine.route_for`).
+ROUTES = ("xla", "chain", "sharded")
+
+
+@dataclasses.dataclass(frozen=True)
+class MatFnRequest:
+    """One matrix-function request: ``op(operand[, power])``.
+
+    ``operand`` must be one (n, n) square matrix with n >= 1; ``power`` is
+    only meaningful for ``op="matpow"`` and must be a static python
+    int >= 0 (``power == 0`` answers the identity, the matpow contract).
+    """
+    op: str
+    operand: jax.Array
+    power: int = 1
+
+    def __post_init__(self):
+        if self.op not in OPS:
+            raise ValueError(f"unknown op {self.op!r}; expected one of {OPS}")
+        a = self.operand
+        if a.ndim != 2 or a.shape[0] != a.shape[1] or a.shape[0] < 1:
+            raise ValueError(f"{self.op} requests need one (n, n) matrix "
+                             f"with n >= 1, got shape {a.shape}")
+        if self.op == "matpow":
+            if not isinstance(self.power, int):
+                raise TypeError("matpow requests need a static python int "
+                                "power (one executable per power)")
+            if self.power < 0:
+                raise ValueError("negative powers not supported")
+
+    @property
+    def n(self) -> int:
+        return self.operand.shape[0]
+
+    def bucket_key(self) -> tuple:
+        """(op, n, dtype, power) — the group this request batches with.
+        expm has no power, so every expm request of one (n, dtype) shares
+        a bucket."""
+        power = self.power if self.op == "matpow" else -1
+        return (self.op, self.n, self.operand.dtype.name, power)
+
+
+# One-dispatch bucket assembly: an eager ``jnp.stack`` over B small device
+# arrays costs one dispatch per operand (measured to dominate the flush),
+# and a host-side numpy round-trip costs two O(B n^2) copies; this jitted
+# assembler stacks + batch-pads in a single call (~4-5x faster than the
+# host path at every measured size). Filler slots are zero matrices.
+@functools.partial(jax.jit, static_argnames=("bpad",))
+def _assemble(operands, *, bpad: int):
+    stack = jnp.stack(operands)
+    b = stack.shape[0]
+    if bpad > b:
+        n = stack.shape[-1]
+        stack = jnp.concatenate(
+            [stack, jnp.zeros((bpad - b, n, n), stack.dtype)])
+    return stack
+
+
+# One-dispatch result scatter: slicing B rows off a bucket result with
+# eager ``out[j]`` indexing costs one dispatch per request (~100 us each on
+# CPU — measured to dominate the flush); this jitted splitter materializes
+# all B per-request answers in a single call. No donation: the row outputs
+# are strictly smaller than the stacked input, so XLA could never alias it.
+@functools.partial(jax.jit, static_argnames=("b",))
+def _split_rows(out, *, b: int):
+    return tuple(out[j] for j in range(b))
+
+
+def bucket_batch(b: int, max_batch: int = 64) -> int:
+    """Pad a batch of ``b`` requests up to the next power of two (capped at
+    ``max_batch``): ceil-log2 bucketing bounds the executable cache at
+    log2(max_batch)+1 shapes per (op, n, dtype, power) group while wasting
+    at most half a bucket of filler compute."""
+    if b < 1:
+        raise ValueError(f"bucket_batch needs b >= 1, got {b}")
+    return min(int(max_batch), 1 << (b - 1).bit_length())
+
+
+class MatFnEngine:
+    """Buckets pending matpow/expm requests and answers them batch-at-once.
+
+    Usage::
+
+        eng = MatFnEngine()
+        t0 = eng.submit("matpow", a0, power=7)
+        t1 = eng.submit("expm", a1)
+        r0, r1 = eng.flush()          # results in submission order
+
+    ``flush`` groups everything submitted since the last flush by
+    ``(op, n, dtype, power)``, pads each group's batch dim to a bucket size,
+    runs one cached executable per bucket, and scatters the answers back in
+    submission order. Padding slots hold zero matrices — their math runs
+    (wasted work bounded by the bucket policy) and their answers are
+    discarded. Batching never changes the math: wherever batched and serial
+    run the same kernels (the ``xla`` route, and every route off-TPU, where
+    the chain degrades to the same XLA dot) answers are BIT-IDENTICAL to
+    per-matrix jitted ``matpow_binary`` / ``expm`` calls (CI-asserted); the
+    on-TPU ``chain``/``sharded`` routes run the tiled Pallas / collective
+    kernels, whose fp32 accumulation order differs from the XLA dot, and
+    are validated to tolerance like every other use of those kernels.
+
+    Args:
+      mesh: optional device mesh; with one, single matrices at
+        ``n >= sharded_min_n`` run the distributed chain.
+      interpret: force the Pallas kernel bodies on CPU for the chain route
+        (tests/validation); off-TPU without it the chain route degrades to
+        the same XLA dot as the ``xla`` route.
+      max_batch: bucket-size cap; bigger groups split into chunks.
+      profile: when True, ``flush`` blocks and wall-times each bucket (the
+        ``stats["last_flush"]`` rows carry ``seconds``); when False (the
+        default) buckets dispatch asynchronously and only the caller's own
+        sync point waits — the serving configuration.
+      thresholds: explicit (cpu_max_n, sharded_min_n) override; default is
+        the tuning cache's ``dispatch`` namespace, resolved per operand
+        dtype (dtype-specific entry first, ``any`` fallback) and memoized
+        per engine so one serving process routes self-consistently (a
+        retuned cache applies to the next engine).
+    """
+
+    def __init__(self, *, mesh=None, interpret: bool = False,
+                 max_batch: int = 64, profile: bool = False,
+                 thresholds: Optional[tuple] = None):
+        if max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+        self.mesh = mesh
+        self.interpret = bool(interpret)
+        self.max_batch = int(max_batch)
+        self.profile = bool(profile)
+        self._thresholds_override = tuple(thresholds) \
+            if thresholds is not None else None
+        self._thresholds_cache: dict = {}
+        self._pending: List[MatFnRequest] = []
+        self._executables: dict = {}
+        self.stats = {"requests": 0, "buckets": 0, "compiles": 0,
+                      "cache_hits": 0, "padded_slots": 0,
+                      "routes": {r: 0 for r in ROUTES}, "last_flush": []}
+
+    # -- request intake ----------------------------------------------------
+    def submit(self, op: str, operand, *, power: int = 1) -> int:
+        """Queue one request; returns its index into the next ``flush()``.
+
+        ``operand`` may be a jax or numpy array (kept as-is — the bucket
+        assembler stacks them in one jitted call) or anything
+        ``jnp.asarray`` accepts. The as-is fast path matters: an asarray
+        per submit costs more than a whole warm serial call at small n.
+        Non-canonical numpy dtypes (f64 under disabled x64 — numpy's
+        default) are converted up front: the executable would silently
+        compute in the canonical dtype anyway, and keying the bucket on
+        the raw dtype would split identical-math requests into separate
+        buckets and executables.
+        """
+        if not isinstance(operand, (jax.Array, np.ndarray)):
+            operand = jnp.asarray(operand)
+        elif isinstance(operand, np.ndarray):
+            canon = jax.dtypes.canonicalize_dtype(operand.dtype)
+            if canon != operand.dtype:
+                operand = jnp.asarray(operand, canon)
+        req = MatFnRequest(op, operand, power)
+        self._pending.append(req)
+        self.stats["requests"] += 1
+        return len(self._pending) - 1
+
+    # -- dispatch policy ---------------------------------------------------
+    def thresholds_for(self, dtype=None) -> tuple:
+        """(cpu_max_n, sharded_min_n) for an operand dtype.
+
+        The explicit constructor override wins; otherwise the tuning
+        cache's ``dispatch`` namespace is consulted per dtype (a bf16
+        crossover legitimately differs from f32 — half the bytes per
+        operand) and memoized for the engine's lifetime.
+        """
+        if self._thresholds_override is not None:
+            return self._thresholds_override
+        key = jnp.dtype(dtype).name if dtype is not None else "any"
+        if key not in self._thresholds_cache:
+            self._thresholds_cache[key] = autotune.dispatch_thresholds(
+                dtype=None if dtype is None else dtype)
+        return self._thresholds_cache[key]
+
+    @property
+    def thresholds(self) -> tuple:
+        """The dtype-agnostic thresholds (override or ``any`` cache entry)."""
+        return self.thresholds_for(None)
+
+    def route_for(self, n: int, batch: int, dtype=None) -> str:
+        """Heterogeneous dispatch: which executor serves an (n, batch) bucket.
+
+        ``sharded`` (mesh-resident chain) only ever takes single huge
+        matrices — the 2-D specs are per-matrix (ROADMAP: batched sharded
+        chains are unexplored) — so batched buckets at any n stay on-device
+        local routes.
+        """
+        cpu_max_n, sharded_min_n = self.thresholds_for(dtype)
+        if self.mesh is not None and batch == 1 and n >= sharded_min_n:
+            return "sharded"
+        if n <= cpu_max_n:
+            return "xla"
+        return "chain"
+
+    @property
+    def _chain_backend(self) -> str:
+        return "pallas_chain_interpret" if self.interpret else "pallas_chain"
+
+    # -- executable cache --------------------------------------------------
+    def _executable(self, op: str, route: str, padded_batch: int, n: int,
+                    dtype: str, power: int):
+        key = (op, route, padded_batch, n, dtype, power)
+        exe = self._executables.get(key)
+        if exe is not None:
+            self.stats["cache_hits"] += 1
+            return key, exe
+        if route == "sharded":
+            # The sharded chain drives its own jitted collective steps (one
+            # compiled step shared per mesh/shape) — no outer jit, and no
+            # batch dim: the bucket is a single matrix by construction.
+            from repro.core.distributed import expm_sharded, matpow_sharded
+            mesh = self.mesh
+            if op == "matpow":
+                exe = lambda x: matpow_sharded(x[0], power, mesh)[None]
+            else:
+                exe = lambda x: expm_sharded(x[0], mesh)[None]
+        else:
+            backend = self._chain_backend if route == "chain" else "xla"
+            if op == "matpow":
+                fn = functools.partial(batched_matpow, p=power,
+                                       backend=backend)
+            else:
+                # lax.map, NOT a stacked expm: the per-matrix 2-D program
+                # lowers identically inside the loop, so bucket answers stay
+                # bit-identical to per-matrix expm calls (a fused batched
+                # expm reassociates the elementwise Pade chain and drifts by
+                # ~1 ulp at B > 1), and each matrix keeps its own
+                # data-dependent squaring count instead of masking to the
+                # stack max. One executable per bucket still amortizes
+                # dispatch across the batch.
+                per_matrix = functools.partial(_expm, backend=backend)
+                fn = lambda x: lax.map(per_matrix, x)
+            # The padded stack is engine-built filler + copies of nothing
+            # the caller holds, so donating it lets XLA run the whole
+            # bucket in the request buffer's HBM.
+            exe = jax.jit(fn, donate_argnums=0)
+        self._executables[key] = exe
+        self.stats["compiles"] += 1
+        return key, exe
+
+    # -- batch execution ---------------------------------------------------
+    def flush(self) -> List[jax.Array]:
+        """Answer every pending request; results in submission order."""
+        pending, self._pending = self._pending, []
+        results: List[Optional[jax.Array]] = [None] * len(pending)
+        groups: dict = {}
+        for idx, req in enumerate(pending):
+            groups.setdefault(req.bucket_key(), []).append((idx, req))
+
+        self.stats["last_flush"] = []
+        for (op, n, dtype, power), members in groups.items():
+            for lo in range(0, len(members), self.max_batch):
+                chunk = members[lo:lo + self.max_batch]
+                b = len(chunk)
+                route = self.route_for(n, b, dtype)
+                bpad = 1 if route == "sharded" else bucket_batch(
+                    b, self.max_batch)
+                stack = _assemble(tuple(req.operand for _, req in chunk),
+                                  bpad=bpad)
+                self.stats["padded_slots"] += bpad - b
+                key, exe = self._executable(op, route, bpad, n, dtype, power)
+                if self.profile:
+                    # Per-bucket wall time for the stats rows — blocks each
+                    # bucket, so profiling serializes the flush; leave it
+                    # off to let buckets dispatch asynchronously.
+                    t0 = time.perf_counter()
+                    out = jax.block_until_ready(exe(stack))
+                    dt = time.perf_counter() - t0
+                else:
+                    out = exe(stack)
+                    dt = None
+                rows = _split_rows(out, b=b)   # drops the filler slots too
+                for j, (idx, _) in enumerate(chunk):
+                    results[idx] = rows[j]
+                self.stats["buckets"] += 1
+                self.stats["routes"][route] += 1
+                self.stats["last_flush"].append(
+                    {"key": key, "requests": b, "padded_batch": bpad,
+                     "route": route, "seconds": dt})
+        return results  # type: ignore[return-value]
+
+    # -- convenience single-request API ------------------------------------
+    def matpow(self, a: jax.Array, power: int) -> jax.Array:
+        """Synchronous A^power through the engine (flushes the queue)."""
+        ticket = self.submit("matpow", a, power=power)
+        return self.flush()[ticket]
+
+    def expm(self, a: jax.Array) -> jax.Array:
+        """Synchronous e^A through the engine (flushes the queue)."""
+        ticket = self.submit("expm", a)
+        return self.flush()[ticket]

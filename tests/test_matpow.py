@@ -80,6 +80,50 @@ class TestMatpow:
             matpow_binary(jnp.ones((3, 4)), 2)
 
 
+class TestDegenerateAndIdentityContracts:
+    """n < 1 matrices are rejected loudly (not identity-shaped garbage);
+    the p = 0 -> identity contract holds at EVERY entry point where it is
+    defined, on both the plain and the fused-chain backends."""
+
+    @pytest.mark.parametrize("fn", [
+        lambda a: matpow_binary(a, 2),
+        lambda a: matpow_naive(a, 2),
+        lambda a: matpow_binary_traced(a, jnp.int32(2)),
+        lambda a: expm(a),
+    ])
+    @pytest.mark.parametrize("shape", [(0, 0), (3, 0, 0)])
+    def test_empty_matrices_rejected(self, fn, shape):
+        with pytest.raises(ValueError, match="n >= 1"):
+            fn(jnp.zeros(shape, jnp.float32))
+
+    def test_chain_constructors_reject_n_lt_1(self):
+        from repro.kernels import ops
+        for n in (0, -3):
+            with pytest.raises(ValueError, match="n >= 1"):
+                ops.PaddedChain(n, jnp.float32)
+            with pytest.raises(ValueError, match="n >= 1"):
+                ops.MatmulChain(n, jnp.float32, interpret=True)
+
+    @pytest.mark.parametrize("backend", ["xla", "pallas_chain_interpret"])
+    def test_p0_identity_every_entry_point(self, backend):
+        a = _mat(9, seed=42)
+        eye = np.eye(9, dtype=np.float32)
+        np.testing.assert_array_equal(
+            np.asarray(matpow_binary(a, 0, backend=backend)), eye)
+        np.testing.assert_array_equal(
+            np.asarray(matpow_naive(a, 0, backend=backend)), eye)
+        np.testing.assert_allclose(
+            np.asarray(matpow_binary_traced(a, jnp.int32(0),
+                                            backend=backend)),
+            eye, atol=1e-6)
+
+    def test_p0_identity_batched_stack(self):
+        a = jnp.stack([_mat(7, 1), _mat(7, 2)])
+        got = np.asarray(matpow_binary(a, 0))
+        np.testing.assert_array_equal(
+            got, np.broadcast_to(np.eye(7, dtype=np.float32), (2, 7, 7)))
+
+
 class TestMatpowProperties:
     @given(st.integers(0, 40), st.integers(0, 40), st.integers(0, 1000))
     @settings(**SET)
