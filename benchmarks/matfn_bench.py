@@ -17,6 +17,19 @@ both modes, the batched-vs-serial speedup, and whether the batched answers
 are bit-identical to the per-matrix calls (they must be — the engine's
 contract). CI asserts speedup >= 1.1 and bit_identical on the CPU smoke
 config (``--quick``, bounded well under 60 s).
+
+``--open-loop`` additionally benches the continuous-batching daemon under
+OPEN-LOOP arrivals (requests submitted at a fixed offered rate, independent
+of completions) at several load factors relative to the measured serial
+capacity, and records p50/p95 latency vs offered load into the JSON's
+``open_loop`` section. The synchronous comparison point is a simulated
+strict-FIFO one-at-a-time server fed the SAME arrival times and the
+measured warm per-request service times — deterministic, and the honest
+"no serving layer" queueing model: above capacity its queue (and p95)
+grows with the run while the daemon batches and keeps up. CI asserts
+daemon p95 <= 3x synchronous p95 at every load factor >= 1.5 and that
+daemon answers stay bit-identical to one synchronous ``flush()`` of the
+same workload.
 """
 
 from __future__ import annotations
@@ -33,9 +46,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-
-def _percentile(xs, q):
-    return float(np.percentile(np.asarray(xs, np.float64), q))
+from repro.launch.matserve import percentile as _percentile
 
 
 def bench_both(workload, *, rounds=7, max_batch=64, interpret=False):
@@ -153,10 +164,138 @@ def chain_route_gate(*, n=96, b=6, power=7, seed=0):
     }
 
 
+def bench_open_loop(*, quick=False, seed=0):
+    """Daemon latency vs offered load under open-loop arrivals.
+
+    Measures warm per-request serial service times first; each load row
+    offers ``factor / mean_service`` requests per second to (a) a simulated
+    strict-FIFO synchronous server (same arrivals, measured service times —
+    deterministic) and (b) the live continuous-batching daemon in the
+    serving configuration (completion observed at the collector, see
+    ``run_open_loop``). ``bit_identical`` compares every daemon answer
+    against one synchronous ``flush()`` of the same workload — the daemon
+    must never change the math, only the schedule.
+    """
+    from repro.core import matpow_binary
+    from repro.kernels import autotune
+    from repro.launch.matserve import make_workload, run_open_loop
+    from repro.serve.matfn import MatFnEngine
+
+    n_requests = 256
+    # Same hot-shape family as the closed-loop bench: the sizes where CI
+    # already proves batched bucket execution beats per-request serial.
+    sizes, powers = (16, 32, 64), (7, 12)
+    max_batch, max_delay_ms = 16, 2.0
+    # Sub-saturation rows (< 1) tabulate the honest latency COST of
+    # batching — the daemon waits out its deadline while an idle serial
+    # server answers in microseconds (docs/serving.md's tradeoff table).
+    # The CI-gated rows are the heavy-overload factors (>= 1.5): there both
+    # servers queue, backlog dominates every fixed floor, and p95s settle
+    # at ~N/throughput on each side — so daemon p95 <= 3x sync p95 holds on
+    # any machine where batched throughput is at least ~1/3 of serial
+    # (CI separately asserts it is >= 1.1x), not just on runners with some
+    # particular absolute speed.
+    load_factors = (0.5, 8.0) if quick else (0.25, 0.5, 1.0, 2.0, 8.0)
+
+    # matpow-only: expm buckets ride the same scheduler; keeping the
+    # open-loop workload single-op keeps the warm phase (one compile per
+    # (class, batch-size)) bounded.
+    workload = make_workload(n_requests, sizes, powers, expm_frac=0.0,
+                             seed=seed)
+
+    fns = {}
+
+    def fn_for(power):
+        if power not in fns:
+            fns[power] = jax.jit(lambda x, p=power: matpow_binary(x, p))
+        return fns[power]
+
+    # Warm per-request serial service times — the FIFO simulator's input
+    # AND the capacity estimate the offered rates are anchored to. MEDIAN
+    # over reps, not min: the simulated server must pay what a real
+    # synchronous server pays per request (dispatch and all); the min-of-
+    # reps estimator the throughput benches use would make the baseline
+    # optimistically fast and turn the latency gate into a machine-speed
+    # lottery.
+    service = []
+    for _op, a, power in workload:
+        fn = fn_for(power)
+        jax.block_until_ready(fn(a))
+        reps = []
+        for _ in range(3):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(a))
+            reps.append(time.perf_counter() - t0)
+        service.append(float(np.median(reps)))
+    mean_service = float(np.mean(service))
+
+    # Bit-identity reference: one synchronous engine flush of the workload.
+    sync_eng = MatFnEngine(max_batch=max_batch,
+                           thresholds=autotune.DEFAULT_DISPATCH_THRESHOLDS)
+    for op, a, power in workload:
+        sync_eng.submit(op, a, power=power)
+    sync_results = [np.asarray(r) for r in sync_eng.flush()]
+
+    # ONE live daemon reused across every load row (the executable cache is
+    # per-engine — a fresh engine per row would recompile ~all bucket
+    # executables per row for no measurement benefit), in the SERVING
+    # configuration (profile=False: buckets dispatch asynchronously, device
+    # work overlaps host assembly; run_open_loop measures completion at the
+    # collector). Thresholds pinned like bench_both; per-class warm so no
+    # compile lands on the latency path. Rows report trigger DELTAS.
+    eng = MatFnEngine(max_batch=max_batch,
+                      thresholds=autotune.DEFAULT_DISPATCH_THRESHOLDS,
+                      max_delay_ms=max_delay_ms)
+    eng.start()
+    for op, n, dtype, power in sorted({(op, a.shape[0], a.dtype.name, p)
+                                       for op, a, p in workload}):
+        eng.warm(op, n, dtype=dtype, power=power)
+
+    rows = []
+    for factor in load_factors:
+        rate = factor / mean_service
+        # Simulated strict-FIFO synchronous server over the same arrivals.
+        t = 0.0
+        sync_lat = []
+        for i, s in enumerate(service):
+            t = max(t, i / rate) + s
+            sync_lat.append(t - i / rate)
+        before = dict(eng.stats["flush_triggers"])
+        results, lats, wall = run_open_loop(eng, workload, rate)
+        triggers = {k: v - before[k]
+                    for k, v in eng.stats["flush_triggers"].items()}
+        rows.append({
+            "load_factor": factor,
+            "offered_rps": round(rate, 1),
+            "achieved_rps": round(n_requests / wall, 1),
+            "sync_p50_us": round(_percentile(sync_lat, 50) * 1e6, 1),
+            "sync_p95_us": round(_percentile(sync_lat, 95) * 1e6, 1),
+            "daemon_p50_us": round(_percentile(lats, 50) * 1e6, 1),
+            "daemon_p95_us": round(_percentile(lats, 95) * 1e6, 1),
+            "bit_identical": bool(all(
+                np.array_equal(np.asarray(r), s)
+                for r, s in zip(results, sync_results))),
+            "flush_triggers": triggers,
+        })
+    eng.close()
+    return {
+        "n_requests": n_requests,
+        "sizes": list(sizes),
+        "powers": list(powers),
+        "max_batch": max_batch,
+        "max_delay_ms": max_delay_ms,
+        "mean_service_us": round(mean_service * 1e6, 1),
+        "rows": rows,
+    }
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--quick", action="store_true",
                     help="CPU smoke config (<60 s): small sizes, 48 requests")
+    ap.add_argument("--open-loop", action="store_true",
+                    help="also bench the daemon under open-loop arrivals "
+                         "(latency vs offered load -> json['open_loop'])")
     ap.add_argument("--json", default="BENCH_matfn.json")
     ap.add_argument("--requests", type=int, default=None)
     ap.add_argument("--seed", type=int, default=0)
@@ -207,6 +346,8 @@ def main(argv=None):
         "executable_compiles": stats["compiles"],
         "chain_route": chain_gate,
     }
+    if args.open_loop:
+        out["open_loop"] = bench_open_loop(quick=args.quick, seed=args.seed)
     Path(args.json).write_text(json.dumps(out, indent=2, sort_keys=True))
     print(f"[matfn_bench] {n_requests} requests "
           f"(sizes={sizes}, powers={powers}, {expm_frac:.0%} expm)")
@@ -220,6 +361,18 @@ def main(argv=None):
     print(f"[matfn_bench] chain gate: buckets={chain_gate['chain_buckets']} "
           f"bit_identical={chain_gate['bit_identical']} "
           f"max_abs_err={chain_gate['max_abs_err']:.1e}")
+    if args.open_loop:
+        ol = out["open_loop"]
+        print(f"[matfn_bench] open loop: mean_service="
+              f"{ol['mean_service_us']}us max_batch={ol['max_batch']} "
+              f"max_delay_ms={ol['max_delay_ms']}")
+        for r in ol["rows"]:
+            print(f"[matfn_bench]   load={r['load_factor']:>4}x "
+                  f"({r['offered_rps']:>7} req/s offered) "
+                  f"sync p95={r['sync_p95_us']:>9}us  "
+                  f"daemon p95={r['daemon_p95_us']:>8}us  "
+                  f"bit_identical={r['bit_identical']} "
+                  f"triggers={r['flush_triggers']}")
     print(f"# wrote {args.json}", file=sys.stderr)
     return 0
 

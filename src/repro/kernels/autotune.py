@@ -20,12 +20,23 @@ Namespaces (the ``kernel`` key segment):
   * ``square_panel`` — the VMEM tier thresholds of ``square_pallas``
                        (whole-operand-resident limit, panel-resident limit);
                        consulted by ``square_tiers``.
-  * ``dispatch``     — the matrix-size thresholds of the serving engine's
-                       heterogeneous dispatch (largest n kept on the CPU/XLA
-                       route, smallest single-matrix n promoted to the
-                       sharded chain); consulted by ``dispatch_thresholds``
-                       (``repro.serve.matfn``), so hardware sweeps can
-                       retune where each bucket runs.
+  * ``dispatch``     — the serving engine's scheduling knobs: the matrix-size
+                       thresholds of heterogeneous dispatch (largest n kept on
+                       the CPU/XLA route, smallest single-matrix n promoted to
+                       the sharded chain; ``dispatch_thresholds``) AND the
+                       continuous-batching daemon's per-traffic-class flush
+                       deadlines (``bucket_deadline_ms`` — how long a
+                       partially-filled (op, n, dtype) bucket may wait for
+                       more requests before it executes). Both are consulted
+                       by ``repro.serve.matfn``, so hardware sweeps retune
+                       where each bucket runs and how long it batches.
+
+Every mutation of the cache (a ``record_*`` call, a persist, a memo clear
+picking up an external file edit) bumps a process-wide generation counter
+(``cache_generation``); long-lived consumers that memoize resolved entries
+— the serving engine memoizes its dispatch thresholds and deadlines — key
+their memo on the generation so a mid-process retune reroutes them instead
+of being silently ignored.
 
 Shared machinery:
 
@@ -74,6 +85,8 @@ __all__ = [
     "sweep_square_tiers",
     "DEFAULT_DISPATCH_THRESHOLDS", "dispatch_thresholds",
     "record_dispatch_thresholds",
+    "DEFAULT_MAX_DELAY_MS", "bucket_deadline_ms", "record_bucket_deadline",
+    "cache_generation",
 ]
 
 _ENV_VAR = "REPRO_AUTOTUNE_CACHE"
@@ -137,8 +150,37 @@ DEFAULT_SQUARE_TIERS: tuple = (SQUARE_VMEM_LIMIT, SQUARE_PANEL_LIMIT)
 #: per backend/dtype through the ``dispatch`` cache namespace.
 DEFAULT_DISPATCH_THRESHOLDS: tuple = (64, 4096)
 
+#: Default continuous-batching flush deadline (milliseconds): how long a
+#: partially-filled serving bucket may wait for more requests before it
+#: executes anyway. Small enough that a lone request never waits
+#: perceptibly; per-(op, n, dtype) entries in the ``dispatch`` namespace
+#: override it (``bucket_deadline_ms``) — big slow buckets can afford to
+#: wait longer than their own execution time, tiny ones cannot.
+DEFAULT_MAX_DELAY_MS: float = 2.0
+
 # In-memory image of each cache file, keyed by resolved path.
 _MEM: dict = {}
+
+# Process-wide mutation counter for the cache (see ``cache_generation``).
+_GENERATION = 0
+
+
+def cache_generation() -> int:
+    """Monotone counter bumped on every cache mutation in this process.
+
+    Covers ``record*`` calls, ``save_cache``, ``clear_memory_cache`` (the
+    documented way to pick up an external file edit), and fresh disk reads.
+    Consumers that memoize resolved entries (e.g. the serving engine's
+    dispatch thresholds and deadlines) compare generations instead of
+    re-reading the cache on every call — and re-resolve the moment a
+    retune lands, instead of routing on stale values until restart.
+    """
+    return _GENERATION
+
+
+def _bump_generation() -> None:
+    global _GENERATION
+    _GENERATION += 1
 
 
 def cache_path() -> Path:
@@ -176,6 +218,13 @@ def _dispatch_key(dtype=None, backend: Optional[str] = None) -> str:
     return f"dispatch/thresholds/{d}/{b}"
 
 
+def _deadline_key(op: str, n: int, dtype=None,
+                  backend: Optional[str] = None) -> str:
+    d = jnp.dtype(dtype).name if dtype is not None else "any"
+    b = backend or jax.default_backend()
+    return f"dispatch/deadline/{op}/{n}/{d}/{b}"
+
+
 def _ascending_pair(vals) -> bool:
     return (len(vals) == 2
             and all(isinstance(x, int) and x > 0 for x in vals)
@@ -184,13 +233,18 @@ def _ascending_pair(vals) -> bool:
 
 def _valid_entry(entry) -> bool:
     """A usable cache entry: a block tiling (len 2 for attention, len 3 for
-    matmul), a ``square_panel`` tier pair, or a ``dispatch`` threshold pair
-    (both: two ascending positive ints)."""
+    matmul), a ``square_panel`` tier pair or ``dispatch`` threshold pair
+    (both: two ascending positive ints), or a ``dispatch`` deadline entry
+    (one positive finite ``max_delay_ms``)."""
     try:
         if "tiers" in entry:
             return _ascending_pair(entry["tiers"])
         if "thresholds" in entry:
             return _ascending_pair(entry["thresholds"])
+        if "max_delay_ms" in entry:
+            v = entry["max_delay_ms"]
+            return (isinstance(v, (int, float)) and not isinstance(v, bool)
+                    and math.isfinite(v) and v > 0)
         blocks = entry["blocks"]
         return (len(blocks) in (2, 3)
                 and all(isinstance(x, int) and x > 0 for x in blocks))
@@ -215,6 +269,7 @@ def load_cache(path: Optional[os.PathLike] = None) -> dict:
             warnings.warn(f"ignoring corrupted autotune cache {path}: {exc}")
             data = {}
     _MEM[memo_key] = data
+    _bump_generation()       # fresh disk read: memoized resolutions are stale
     return data
 
 
@@ -229,6 +284,7 @@ def save_cache(cache: Optional[dict] = None,
     if cache is None:
         cache = _MEM.get(str(path), {})
     _MEM[str(path)] = cache
+    _bump_generation()
     try:
         path.parent.mkdir(parents=True, exist_ok=True)
         tmp = path.with_name(path.name + ".tmp")
@@ -242,6 +298,7 @@ def save_cache(cache: Optional[dict] = None,
 def clear_memory_cache() -> None:
     """Drop the in-process memo (tests; picks up external file edits)."""
     _MEM.clear()
+    _bump_generation()
 
 
 def lookup(m: int, n: int, k: int, dtype=None,
@@ -291,6 +348,7 @@ def record(m: int, n: int, k: int, blocks: Sequence[int], dtype=None,
         "score": None if score is None else float(score),
         "measured": bool(measured),
     }
+    _bump_generation()
     if save:
         save_cache(cache)
 
@@ -321,6 +379,7 @@ def record_square_tiers(whole_limit: int, panel_limit: int, dtype=None,
         "tiers": [int(whole_limit), int(panel_limit)],
         "measured": bool(measured),
     }
+    _bump_generation()
     if save:
         save_cache(cache)
 
@@ -360,6 +419,55 @@ def record_dispatch_thresholds(cpu_max_n: int, sharded_min_n: int, dtype=None,
         "thresholds": [int(cpu_max_n), int(sharded_min_n)],
         "measured": bool(measured),
     }
+    _bump_generation()
+    if save:
+        save_cache(cache)
+
+
+def bucket_deadline_ms(op: str, n: int, dtype=None,
+                       backend: Optional[str] = None) -> float:
+    """Tuned continuous-batching flush deadline for one traffic class.
+
+    How long the serving daemon lets a partially-filled ``(op, n, dtype)``
+    bucket wait for more requests before executing anyway. Consults the
+    ``dispatch`` namespace's deadline entries (dtype-specific first, then
+    dtype-agnostic) and falls back to ``DEFAULT_MAX_DELAY_MS``. Resolution
+    happens outside any jit and is re-memoized by the engine per cache
+    generation, so a retuned entry takes effect on the next bucket.
+    """
+    cache = load_cache()
+    for key in (_deadline_key(op, n, dtype, backend),
+                _deadline_key(op, n, None, backend)):
+        entry = cache.get(key)
+        if (entry is not None and _valid_entry(entry)
+                and "max_delay_ms" in entry):
+            return float(entry["max_delay_ms"])
+    return DEFAULT_MAX_DELAY_MS
+
+
+def record_bucket_deadline(op: str, n: int, max_delay_ms: float, dtype=None,
+                           backend: Optional[str] = None,
+                           measured: bool = False, save: bool = True) -> None:
+    """Store a tuned flush deadline for one serving traffic class.
+
+    ``measured`` records provenance exactly like the block namespaces:
+    an open-loop latency sweep on real hardware records ``True`` so
+    modeled/default entries can be invalidated wholesale.
+    """
+    if not isinstance(op, str) or not op:
+        raise ValueError(f"op must be a non-empty string, got {op!r}")
+    if not isinstance(n, int) or n < 1:
+        raise ValueError(f"n must be a positive int, got {n!r}")
+    if not (isinstance(max_delay_ms, (int, float))
+            and math.isfinite(max_delay_ms) and max_delay_ms > 0):
+        raise ValueError(f"max_delay_ms must be a positive finite number, "
+                         f"got {max_delay_ms!r}")
+    cache = load_cache()
+    cache[_deadline_key(op, n, dtype, backend)] = {
+        "max_delay_ms": float(max_delay_ms),
+        "measured": bool(measured),
+    }
+    _bump_generation()
     if save:
         save_cache(cache)
 

@@ -1,21 +1,34 @@
 """Matrix-function serving driver: mixed (n, power) traffic through the
 bucketing engine.
 
+Batch (library) mode — submit everything, flush once::
+
     PYTHONPATH=src python -m repro.launch.matserve \
         --requests 64 --sizes 8,16,32 --powers 2,7,12 --expm-frac 0.25
 
+Daemon (continuous-batching) mode — an OPEN-LOOP synthetic traffic
+generator submits at a fixed offered rate (arrivals independent of
+completions, the honest serving-load model), the background scheduler
+flushes buckets on fill-or-deadline, and the report shows per-request
+latency percentiles next to throughput::
+
+    PYTHONPATH=src python -m repro.launch.matserve \
+        --daemon --rate 500 --requests 256 --sizes 16,32 --powers 7,12
+
 Generates a randomized workload of matpow/expm requests over mixed sizes,
-powers, and dtypes, submits them all to ``repro.serve.matfn.MatFnEngine``,
-flushes once, and prints throughput plus the engine's bucket/route/cache
-statistics. ``--verify`` additionally replays every request as a
-per-matrix call and reports the max deviation (0.0 wherever batched and
-serial run the same kernels — every route off-TPU; the on-TPU chain/
-sharded routes differ by kernel accumulation order, see docs/serving.md).
+powers, and dtypes and prints throughput plus the engine's
+bucket/route/cache statistics. ``--verify`` additionally replays every
+request as a per-matrix call and reports the max deviation (0.0 wherever
+batched and serial run the same kernels — every route off-TPU; the on-TPU
+chain/sharded routes differ by kernel accumulation order, see
+docs/serving.md).
 """
 
 from __future__ import annotations
 
 import argparse
+import queue
+import threading
 import time
 
 import jax
@@ -50,31 +63,145 @@ def run_workload(engine: MatFnEngine, workload):
     return results, time.perf_counter() - t0
 
 
-def main(argv=None):
-    ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--requests", type=int, default=64)
-    ap.add_argument("--sizes", default="8,16,32",
-                    help="comma-separated matrix sizes")
-    ap.add_argument("--powers", default="2,7,12",
-                    help="comma-separated matpow powers")
-    ap.add_argument("--expm-frac", type=float, default=0.25,
-                    help="fraction of requests that are expm")
-    ap.add_argument("--dtypes", default="float32",
-                    help="comma-separated operand dtypes (e.g. float32,bfloat16)")
-    ap.add_argument("--max-batch", type=int, default=64)
-    ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--interpret", action="store_true",
-                    help="run the chain route's Pallas kernel bodies on CPU")
-    ap.add_argument("--verify", action="store_true",
-                    help="replay per-matrix and report max deviation")
-    args = ap.parse_args(argv)
+def run_open_loop(engine: MatFnEngine, workload, rate: float, *,
+                  timeout: float = 120.0):
+    """Open-loop traffic against a STARTED daemon engine.
 
-    sizes = [int(s) for s in args.sizes.split(",")]
-    powers = [int(p) for p in args.powers.split(",")]
-    dtypes = args.dtypes.split(",")
-    workload = make_workload(args.requests, sizes, powers, args.expm_frac,
-                             args.seed, dtypes=dtypes)
+    Requests are submitted at their scheduled arrival times ``i / rate``
+    regardless of completions (open loop: offered load never backs off when
+    the server lags — the regime where a synchronous server's queue grows
+    without bound but continuous batching keeps up).
 
+    Latency is measured the way a load-generator client observes it: a
+    CONCURRENT collector thread waits on each future in submission order,
+    blocks until its answer's device work is done, and charges
+    ``now - submit_time``. Running the collector alongside the generator
+    matters: a serial collect-after-submit pass would timestamp every
+    sub-saturation answer at roughly the end of the submission window and
+    report the generator's length, not the daemon's latency. With the
+    serving configuration (``profile=False``) futures resolve with
+    in-flight arrays and the daemon pipelines device work against host
+    assembly — the collector's block is the honest completion point. With
+    ``profile=True`` bucket execution already blocked on the scheduler
+    thread, so the future's own ``resolved_at`` timestamp is used instead
+    (exact per-request completion, no collector-position skew, at the cost
+    of serializing buckets).
+
+    Returns ``(results, latencies_s, wall_s)`` in submission order.
+    """
+    if not engine.running:
+        raise RuntimeError("run_open_loop needs a started daemon engine")
+    profiled = engine.profile
+    n = len(workload)
+    results, lats = [None] * n, [None] * n
+    inbox: "queue.Queue" = queue.Queue()
+    collector_error = []
+
+    def collect():
+        try:
+            while True:
+                item = inbox.get()
+                if item is None:           # sentinel: generator is done
+                    return
+                i, fut, t0 = item
+                r = fut.result(timeout=timeout)
+                jax.block_until_ready(r)
+                done = fut.resolved_at if profiled else time.perf_counter()
+                results[i] = r
+                lats[i] = done - t0
+        except BaseException as exc:       # surface on the caller thread
+            collector_error.append(exc)
+
+    collector = threading.Thread(target=collect, name="matserve-collect")
+    collector.start()
+    t_start = time.perf_counter()
+    try:
+        for i, (op, a, power) in enumerate(workload):
+            target = t_start + i / rate
+            while True:
+                remaining = target - time.perf_counter()
+                if remaining <= 0:
+                    break
+                time.sleep(min(remaining, 5e-4))
+            fut = engine.submit(op, a, power=power)
+            inbox.put((i, fut, time.perf_counter()))
+    finally:
+        # Always unblock the collector — a submit raising mid-loop must
+        # not leave a non-daemon thread parked on inbox.get() forever.
+        inbox.put(None)
+        collector.join()
+    if collector_error:
+        raise collector_error[0]
+    return results, lats, time.perf_counter() - t_start
+
+
+def _verify(workload, results):
+    from repro.core import expm, matpow_binary
+
+    # One jit wrapper per (op, power) — a fresh jax.jit object per
+    # request would recompile the same program for every request.
+    fns = {}
+
+    def fn_for(op, power):
+        key = (op, power)
+        if key not in fns:
+            fns[key] = jax.jit(expm) if op == "expm" else \
+                jax.jit(lambda x, p=power: matpow_binary(x, p))
+        return fns[key]
+
+    worst = 0.0
+    for (op, a, power), got in zip(workload, results):
+        want = fn_for(op, power)(a)
+        worst = max(worst, float(jnp.max(jnp.abs(
+            got.astype(jnp.float32) - want.astype(jnp.float32)))))
+    print(f"[matserve] verify: max |batched - per-matrix| = {worst:.2e}")
+
+
+def percentile(xs, q):
+    """Shared p50/p95 helper (also used by benchmarks/matfn_bench.py)."""
+    return float(np.percentile(np.asarray(xs, np.float64), q))
+
+
+def _daemon_main(args, workload):
+    from repro.serve.scheduler import AdaptiveDeadline, FillOrDeadline
+
+    policy = AdaptiveDeadline() if args.policy == "adaptive" \
+        else FillOrDeadline()
+    # profile=True: futures resolve at device completion, so the latency
+    # report measures finished answers (serializes buckets; the report is
+    # the point of the driver).
+    engine = MatFnEngine(interpret=args.interpret, max_batch=args.max_batch,
+                         profile=True, policy=policy,
+                         max_delay_ms=args.max_delay_ms)
+    engine.start()
+    # Prewarm every bucket shape the workload can produce so the timed run
+    # never pays a compile on the latency path (steady-state serving).
+    for op, n, dtype, power in {(op, a.shape[0], a.dtype.name, p)
+                                for op, a, p in workload}:
+        engine.warm(op, n, dtype=dtype, power=power)
+    results, lats, wall = run_open_loop(engine, workload, args.rate)
+    stats = engine.stats
+    engine.close()
+
+    offered = args.rate
+    achieved = len(workload) / wall
+    print(f"[matserve] daemon: {len(workload)} requests, offered "
+          f"{offered:.0f} req/s, completed in {wall*1e3:.1f} ms "
+          f"({achieved:.0f} req/s) — policy={args.policy} "
+          f"max_delay_ms={args.max_delay_ms}")
+    print(f"[matserve]   latency p50={percentile(lats, 50)*1e3:.2f} ms "
+          f"p95={percentile(lats, 95)*1e3:.2f} ms "
+          f"max={max(lats)*1e3:.2f} ms")
+    trig = stats["flush_triggers"]
+    print(f"[matserve]   buckets={stats['buckets']} "
+          f"compiles={stats['compiles']} flush_triggers={trig} "
+          f"routes={stats['routes']}")
+    if args.verify:
+        _verify(workload, results)
+    return 0
+
+
+def _batch_main(args, workload):
     # profile=True: per-bucket wall times for the report below (serializes
     # the flush; serving deployments leave it off).
     engine = MatFnEngine(interpret=args.interpret, max_batch=args.max_batch,
@@ -104,28 +231,52 @@ def main(argv=None):
         print(f"[matserve]   bucket {op:6s} n={n:<5d} p={power:<4d} {dtype} "
               f"-> {route:5s} B={row['requests']}/{row['padded_batch']} "
               f"{row['seconds']*1e3:7.2f} ms")
-
     if args.verify:
-        from repro.core import expm, matpow_binary
-
-        # One jit wrapper per (op, power) — a fresh jax.jit object per
-        # request would recompile the same program for every request.
-        fns = {}
-
-        def fn_for(op, power):
-            key = (op, power)
-            if key not in fns:
-                fns[key] = jax.jit(expm) if op == "expm" else \
-                    jax.jit(lambda x, p=power: matpow_binary(x, p))
-            return fns[key]
-
-        worst = 0.0
-        for (op, a, power), got in zip(workload, results):
-            want = fn_for(op, power)(a)
-            worst = max(worst, float(jnp.max(jnp.abs(
-                got.astype(jnp.float32) - want.astype(jnp.float32)))))
-        print(f"[matserve] verify: max |batched - per-matrix| = {worst:.2e}")
+        _verify(workload, results)
     return 0
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--requests", type=int, default=64)
+    ap.add_argument("--sizes", default="8,16,32",
+                    help="comma-separated matrix sizes")
+    ap.add_argument("--powers", default="2,7,12",
+                    help="comma-separated matpow powers")
+    ap.add_argument("--expm-frac", type=float, default=0.25,
+                    help="fraction of requests that are expm")
+    ap.add_argument("--dtypes", default="float32",
+                    help="comma-separated operand dtypes (e.g. float32,bfloat16)")
+    ap.add_argument("--max-batch", type=int, default=64)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--interpret", action="store_true",
+                    help="run the chain route's Pallas kernel bodies on CPU")
+    ap.add_argument("--verify", action="store_true",
+                    help="replay per-matrix and report max deviation")
+    ap.add_argument("--daemon", action="store_true",
+                    help="continuous-batching daemon + open-loop traffic")
+    ap.add_argument("--rate", type=float, default=500.0,
+                    help="daemon mode: offered load, requests/second")
+    ap.add_argument("--max-delay-ms", type=float, default=None,
+                    help="daemon mode: bucket flush deadline override "
+                         "(default: tuned per traffic class from the "
+                         "dispatch namespace)")
+    ap.add_argument("--policy", choices=("fill", "adaptive"), default="fill",
+                    help="daemon flush policy (docs/serving.md)")
+    args = ap.parse_args(argv)
+
+    if args.daemon and args.rate <= 0:
+        ap.error("--rate must be > 0 requests/second")
+    if args.max_delay_ms is not None and args.max_delay_ms <= 0:
+        ap.error("--max-delay-ms must be > 0")
+    sizes = [int(s) for s in args.sizes.split(",")]
+    powers = [int(p) for p in args.powers.split(",")]
+    dtypes = args.dtypes.split(",")
+    workload = make_workload(args.requests, sizes, powers, args.expm_frac,
+                             args.seed, dtypes=dtypes)
+    if args.daemon:
+        return _daemon_main(args, workload)
+    return _batch_main(args, workload)
 
 
 if __name__ == "__main__":

@@ -1,10 +1,21 @@
 """repro.serve — serving layer.
 
-``engine``  — batched LM prefill/decode over the model stack.
-``matfn``   — the matrix-function serving engine: request bucketing,
-              batched squaring chains, heterogeneous dispatch.
+``engine``    — batched LM prefill/decode over the model stack.
+``matfn``     — the matrix-function serving engine: request bucketing,
+                batched squaring chains, heterogeneous dispatch, and the
+                continuous-batching daemon (``MatFnEngine.start()``).
+``scheduler`` — the daemon's pluggable flush policies (fill-or-deadline,
+                arrival-rate-adaptive) and injectable clocks.
 """
 
-from repro.serve.matfn import MatFnEngine, MatFnRequest, bucket_batch
+from repro.serve.matfn import (BucketExecutionError, MatFnEngine,
+                               MatFnFuture, MatFnRequest, bucket_batch)
+from repro.serve.scheduler import (AdaptiveDeadline, FillOrDeadline,
+                                   FlushPolicy, ManualClock, SystemClock)
 
-__all__ = ["MatFnEngine", "MatFnRequest", "bucket_batch"]
+__all__ = [
+    "MatFnEngine", "MatFnRequest", "MatFnFuture", "BucketExecutionError",
+    "bucket_batch",
+    "FlushPolicy", "FillOrDeadline", "AdaptiveDeadline",
+    "SystemClock", "ManualClock",
+]

@@ -1,5 +1,5 @@
 """Matrix-function serving engine: request bucketing, batched squaring
-chains, and heterogeneous dispatch.
+chains, heterogeneous dispatch, and a continuous-batching daemon.
 
 The paper's headline pipeline keeps the accelerator saturated across
 matrices "of different sizes and with different powers". This module is
@@ -22,18 +22,36 @@ that pipeline as a service layer over the reproduction's chain executors:
     (:class:`repro.core.batched.BatchedMatmulChain`), and huge *single*
     matrices are promoted to :class:`~repro.core.distributed.
     ShardedMatmulChain` when the engine owns a mesh. Hardware sweeps retune
-    the thresholds by writing the ``dispatch`` cache entry — no code change.
+    the thresholds by writing the ``dispatch`` cache entry — no code change,
+    and (cache-generation check) no engine restart either.
+  * **Continuous batching** (:meth:`MatFnEngine.start`): in daemon mode
+    ``submit`` returns a :class:`MatFnFuture` immediately and a background
+    scheduler thread flushes each bucket when it FILLS to ``max_batch`` or
+    when its oldest request crosses a per-traffic-class deadline
+    (:func:`repro.kernels.autotune.bucket_deadline_ms`, a ``dispatch``
+    namespace entry like every other knob). Device work overlaps host-side
+    assembly of the next bucket: executables dispatch asynchronously and
+    futures resolve with in-flight arrays. Executor failures are routed
+    into the affected bucket's futures as :class:`BucketExecutionError`
+    (never lost on a daemon thread), and :meth:`MatFnEngine.close` drains
+    every pending bucket before the thread exits.
 
-Driver: ``python -m repro.launch.matserve``; bench:
-``benchmarks/matfn_bench.py`` (writes ``BENCH_matfn.json``). See
-``docs/serving.md`` for the policy details and the paper mapping.
+Flush policies and the injectable clock live in
+:mod:`repro.serve.scheduler`. Driver: ``python -m repro.launch.matserve``
+(``--daemon`` for open-loop traffic against the daemon); bench:
+``benchmarks/matfn_bench.py`` (``--open-loop`` for latency-vs-load, writes
+``BENCH_matfn.json``). See ``docs/serving.md`` for the policy details and
+the paper mapping.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import functools
+import threading
 import time
+from concurrent.futures import CancelledError, InvalidStateError
+from concurrent.futures import TimeoutError as FutureTimeoutError
 from typing import List, Optional
 
 import jax
@@ -44,14 +62,113 @@ from jax import lax
 from repro.core.batched import batched_matpow
 from repro.core.expm import expm as _expm
 from repro.kernels import autotune
+from repro.serve.scheduler import (BucketView, FillOrDeadline, FlushPolicy,
+                                   SystemClock)
 
-__all__ = ["MatFnRequest", "MatFnEngine", "bucket_batch", "OPS", "ROUTES"]
+__all__ = ["MatFnRequest", "MatFnEngine", "MatFnFuture",
+           "BucketExecutionError", "bucket_batch", "OPS", "ROUTES"]
 
 #: Ops the engine serves.
 OPS = ("matpow", "expm")
 
 #: Dispatch routes a bucket can take (see :meth:`MatFnEngine.route_for`).
 ROUTES = ("xla", "chain", "sharded")
+
+#: Flush triggers the daemon distinguishes in ``stats["flush_triggers"]``.
+TRIGGERS = ("fill", "deadline", "kick", "drain")
+
+#: Bound on ``stats["last_flush"]`` in daemon mode (a long-lived daemon
+#: must not grow an unbounded report list; sync ``flush`` resets it).
+_LAST_FLUSH_ROWS = 256
+
+_UNSET = object()
+
+
+class BucketExecutionError(RuntimeError):
+    """An executor failed while answering a bucket.
+
+    Raised INTO every affected future (never swallowed on the scheduler
+    thread): the message carries the bucket key so a consumer holding one
+    future of a 64-request bucket can tell which traffic class — not just
+    which request — is poisoned, and ``__cause__`` chains the original
+    executor exception.
+    """
+
+    def __init__(self, key: tuple, cause: BaseException):
+        op, n, dtype, power = key
+        super().__init__(
+            f"bucket (op={op}, n={n}, dtype={dtype}, power={power}) failed "
+            f"to execute: {type(cause).__name__}: {cause}")
+        self.key = key
+        self.__cause__ = cause
+
+
+class MatFnFuture:
+    """One daemon request's pending answer.
+
+    Thread-safe, single-assignment: exactly one of ``set_result`` /
+    ``set_exception`` may ever fire — a second resolution attempt raises
+    ``concurrent.futures.InvalidStateError`` (the no-double-completion
+    invariant the concurrency suite asserts). ``result`` may return a
+    still-in-flight jax array (jax arrays are themselves futures); callers
+    that need device completion block on it like any other jax value.
+    ``resolved_at`` records ``time.perf_counter()`` at resolution so
+    open-loop benchmarks can measure latency without polling.
+    """
+
+    __slots__ = ("bucket_key", "resolved_at", "_event", "_lock", "_result",
+                 "_exception")
+
+    def __init__(self, bucket_key: Optional[tuple] = None):
+        self.bucket_key = bucket_key
+        self.resolved_at: Optional[float] = None
+        self._event = threading.Event()
+        self._lock = threading.Lock()
+        self._result = _UNSET
+        self._exception: Optional[BaseException] = None
+
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    def set_result(self, value) -> None:
+        with self._lock:
+            if self._event.is_set():
+                raise InvalidStateError(f"{self!r} already resolved")
+            self._result = value
+            self.resolved_at = time.perf_counter()
+            self._event.set()
+
+    def set_exception(self, exc: BaseException) -> None:
+        with self._lock:
+            if self._event.is_set():
+                raise InvalidStateError(f"{self!r} already resolved")
+            self._exception = exc
+            self.resolved_at = time.perf_counter()
+            self._event.set()
+
+    def result(self, timeout: Optional[float] = None):
+        # concurrent.futures.TimeoutError, not the builtin: they are only
+        # aliases from 3.11 on, and the futures idiom
+        # (``except futures.TimeoutError``) must work on 3.10 too — the
+        # class already adopts the futures exception types elsewhere
+        # (CancelledError, InvalidStateError).
+        if not self._event.wait(timeout):
+            raise FutureTimeoutError(f"result not ready after {timeout}s")
+        if self._exception is not None:
+            raise self._exception
+        return self._result
+
+    def exception(self,
+                  timeout: Optional[float] = None) -> Optional[BaseException]:
+        if not self._event.wait(timeout):
+            raise FutureTimeoutError(f"result not ready after {timeout}s")
+        return self._exception
+
+    def __repr__(self):
+        state = "pending"
+        if self._event.is_set():
+            state = "error" if self._exception is not None else "done"
+        return f"<MatFnFuture {state} key={self.bucket_key}>"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -90,6 +207,20 @@ class MatFnRequest:
         a bucket."""
         power = self.power if self.op == "matpow" else -1
         return (self.op, self.n, self.operand.dtype.name, power)
+
+
+@dataclasses.dataclass
+class _Bucket:
+    """One OPEN daemon bucket: futures waiting to be batched."""
+    key: tuple
+    members: list                # [(MatFnFuture, MatFnRequest), ...]
+    first_ts: float              # clock time of the oldest pending request
+    max_delay_s: float           # tuned flush-by delay for this class
+    forced: bool = False         # kick()/convenience API: flush at next poll
+
+    def view(self) -> BucketView:
+        return BucketView(self.key, len(self.members), self.first_ts,
+                          self.max_delay_s)
 
 
 # One-dispatch bucket assembly: an eager ``jnp.stack`` over B small device
@@ -131,25 +262,40 @@ def bucket_batch(b: int, max_batch: int = 64) -> int:
 class MatFnEngine:
     """Buckets pending matpow/expm requests and answers them batch-at-once.
 
-    Usage::
+    Synchronous (library) mode::
 
         eng = MatFnEngine()
-        t0 = eng.submit("matpow", a0, power=7)
+        t0 = eng.submit("matpow", a0, power=7)    # -> int ticket
         t1 = eng.submit("expm", a1)
-        r0, r1 = eng.flush()          # results in submission order
+        r0, r1 = eng.flush()                      # results in ticket order
+
+    Daemon (continuous-batching) mode::
+
+        with MatFnEngine(max_batch=16) as eng:    # __enter__ -> start()
+            fut = eng.submit("matpow", a0, power=7)   # -> MatFnFuture
+            r0 = fut.result(timeout=5)
+        # __exit__ -> close(): drains every pending bucket
 
     ``flush`` groups everything submitted since the last flush by
     ``(op, n, dtype, power)``, pads each group's batch dim to a bucket size,
     runs one cached executable per bucket, and scatters the answers back in
-    submission order. Padding slots hold zero matrices — their math runs
-    (wasted work bounded by the bucket policy) and their answers are
-    discarded. Batching never changes the math: wherever batched and serial
-    run the same kernels (the ``xla`` route, and every route off-TPU, where
-    the chain degrades to the same XLA dot) answers are BIT-IDENTICAL to
-    per-matrix jitted ``matpow_binary`` / ``expm`` calls (CI-asserted); the
-    on-TPU ``chain``/``sharded`` routes run the tiled Pallas / collective
-    kernels, whose fp32 accumulation order differs from the XLA dot, and
-    are validated to tolerance like every other use of those kernels.
+    submission order. The daemon runs the SAME bucket core on a scheduler
+    thread — same executable cache, same assembly, same routes — flushing a
+    bucket when it fills to ``max_batch`` or when its oldest request crosses
+    the bucket's deadline (engine ``max_delay_ms`` override, else the tuning
+    cache's per-(op, n, dtype) ``dispatch`` deadline entry, else
+    ``autotune.DEFAULT_MAX_DELAY_MS``), so daemon answers are bit-identical
+    to synchronous ``flush()`` answers wherever the synchronous path is
+    bit-identical to per-matrix calls (CI-asserted). Padding slots hold zero
+    matrices — their math runs (wasted work bounded by the bucket policy)
+    and their answers are discarded. Batching never changes the math:
+    wherever batched and serial run the same kernels (the ``xla`` route, and
+    every route off-TPU, where the chain degrades to the same XLA dot)
+    answers are BIT-IDENTICAL to per-matrix jitted ``matpow_binary`` /
+    ``expm`` calls (CI-asserted); the on-TPU ``chain``/``sharded`` routes
+    run the tiled Pallas / collective kernels, whose fp32 accumulation order
+    differs from the XLA dot, and are validated to tolerance like every
+    other use of those kernels.
 
     Args:
       mesh: optional device mesh; with one, single matrices at
@@ -157,39 +303,90 @@ class MatFnEngine:
       interpret: force the Pallas kernel bodies on CPU for the chain route
         (tests/validation); off-TPU without it the chain route degrades to
         the same XLA dot as the ``xla`` route.
-      max_batch: bucket-size cap; bigger groups split into chunks.
-      profile: when True, ``flush`` blocks and wall-times each bucket (the
-        ``stats["last_flush"]`` rows carry ``seconds``); when False (the
-        default) buckets dispatch asynchronously and only the caller's own
-        sync point waits — the serving configuration.
+      max_batch: bucket-size cap; bigger groups split into chunks. In daemon
+        mode also the fill trigger: a bucket reaching ``max_batch`` flushes
+        immediately.
+      profile: when True, bucket execution blocks and wall-times each bucket
+        (the ``stats["last_flush"]`` rows carry ``seconds``, and daemon
+        futures resolve only when the device is done — what the open-loop
+        bench uses for honest latency); when False (the default) buckets
+        dispatch asynchronously and only the caller's own sync point waits
+        — the serving configuration, where in-flight device work overlaps
+        host-side assembly of the next bucket.
       thresholds: explicit (cpu_max_n, sharded_min_n) override; default is
         the tuning cache's ``dispatch`` namespace, resolved per operand
         dtype (dtype-specific entry first, ``any`` fallback) and memoized
-        per engine so one serving process routes self-consistently (a
-        retuned cache applies to the next engine).
+        per cache GENERATION — recording new thresholds mid-process
+        (``autotune.record_dispatch_thresholds``) reroutes this engine's
+        next bucket instead of waiting for a restart.
+      max_delay_ms: explicit daemon flush deadline override for every
+        bucket; default None resolves per traffic class from the tuning
+        cache (``autotune.bucket_deadline_ms``), memoized with the same
+        generation check.
+      policy: a :class:`repro.serve.scheduler.FlushPolicy` (default
+        :class:`~repro.serve.scheduler.FillOrDeadline`); see
+        :class:`~repro.serve.scheduler.AdaptiveDeadline` for arrival-rate-
+        adaptive deadlines.
+      clock: a :class:`repro.serve.scheduler.Clock` (default the system
+        monotonic clock); tests inject
+        :class:`~repro.serve.scheduler.ManualClock` to drive deadlines
+        deterministically.
     """
 
     def __init__(self, *, mesh=None, interpret: bool = False,
                  max_batch: int = 64, profile: bool = False,
-                 thresholds: Optional[tuple] = None):
+                 thresholds: Optional[tuple] = None,
+                 max_delay_ms: Optional[float] = None,
+                 policy: Optional[FlushPolicy] = None,
+                 clock=None):
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+        if max_delay_ms is not None and not max_delay_ms > 0:
+            raise ValueError(f"max_delay_ms must be > 0, got {max_delay_ms}")
         self.mesh = mesh
         self.interpret = bool(interpret)
         self.max_batch = int(max_batch)
         self.profile = bool(profile)
         self._thresholds_override = tuple(thresholds) \
             if thresholds is not None else None
+        self._max_delay_ms = None if max_delay_ms is None \
+            else float(max_delay_ms)
+        self._policy = policy if policy is not None else FillOrDeadline()
+        self._clock = clock if clock is not None else SystemClock()
+        # Memoized dispatch resolutions, each stored WITH the autotune
+        # generation it was resolved under and validated on read (a retuned
+        # cache reroutes the running engine, not just the next one).
         self._thresholds_cache: dict = {}
+        self._deadline_cache: dict = {}
         self._pending: List[MatFnRequest] = []
         self._executables: dict = {}
+        # Daemon state (inert until start()).
+        self._cv = threading.Condition()
+        self._daemon: Optional[threading.Thread] = None
+        self._open_buckets: dict = {}     # key -> _Bucket
+        # Buckets popped from _open_buckets but not yet fully resolved
+        # (scheduler thread only). Kept reachable so a scheduler crash can
+        # fail their futures too — a bucket must never be lost in a local
+        # variable of a dying frame.
+        self._in_flight: List[_Bucket] = []
+        self._closing = False
+        self._closed = False
+        self._waiting = False             # scheduler idle (settle handshake)
+        self._scheduler_crash: Optional[BaseException] = None
         self.stats = {"requests": 0, "buckets": 0, "compiles": 0,
                       "cache_hits": 0, "padded_slots": 0,
-                      "routes": {r: 0 for r in ROUTES}, "last_flush": []}
+                      "routes": {r: 0 for r in ROUTES},
+                      "flush_triggers": {t: 0 for t in TRIGGERS},
+                      "last_flush": []}
 
     # -- request intake ----------------------------------------------------
-    def submit(self, op: str, operand, *, power: int = 1) -> int:
-        """Queue one request; returns its index into the next ``flush()``.
+    def submit(self, op: str, operand, *, power: int = 1):
+        """Queue one request.
+
+        Synchronous mode returns the request's int index into the next
+        ``flush()``; daemon mode (after :meth:`start`) returns a
+        :class:`MatFnFuture` immediately — the scheduler thread resolves it
+        when the request's bucket fills or its deadline passes.
 
         ``operand`` may be a jax or numpy array (kept as-is — the bucket
         assembler stacks them in one jitted call) or anything
@@ -201,6 +398,8 @@ class MatFnEngine:
         the raw dtype would split identical-math requests into separate
         buckets and executables.
         """
+        if self._closed or self._closing:
+            raise RuntimeError("engine is closed; no new requests")
         if not isinstance(operand, (jax.Array, np.ndarray)):
             operand = jnp.asarray(operand)
         elif isinstance(operand, np.ndarray):
@@ -208,31 +407,102 @@ class MatFnEngine:
             if canon != operand.dtype:
                 operand = jnp.asarray(operand, canon)
         req = MatFnRequest(op, operand, power)
-        self._pending.append(req)
-        self.stats["requests"] += 1
-        return len(self._pending) - 1
+        # Mode check under the lock: a concurrent start() must never see
+        # _pending empty and then have a sync request appended behind its
+        # back — that ticket could never resolve (the daemon only serves
+        # _open_buckets and flush() is rejected in daemon mode).
+        with self._cv:
+            if self._daemon is None:
+                self._pending.append(req)
+                self.stats["requests"] += 1
+                return len(self._pending) - 1
+        return self._submit_daemon(req)
+
+    def _submit_daemon(self, req: MatFnRequest) -> MatFnFuture:
+        key = req.bucket_key()
+        fut = MatFnFuture(key)
+        # Resolved OUTSIDE the lock: a generation bump makes this read the
+        # cache file, and one slow disk read must not stall every producer
+        # and the scheduler behind the condition lock. Unused when the
+        # bucket already exists — the lookup is memoized.
+        delay_s = self._bucket_delay_s(key)
+        with self._cv:
+            if self._closing or self._closed:
+                raise RuntimeError("engine is closed; no new requests")
+            if self._scheduler_crash is not None:
+                raise RuntimeError("scheduler thread crashed") \
+                    from self._scheduler_crash
+            now = self._clock.now()
+            bucket = self._open_buckets.get(key)
+            if bucket is None:
+                bucket = _Bucket(key, [], now, delay_s)
+                self._open_buckets[key] = bucket
+            bucket.members.append((fut, req))
+            self.stats["requests"] += 1
+            self._policy.observe(bucket.view(), now)
+            # Always wake the scheduler: a new bucket changes its sleep
+            # deadline, a filled bucket is due, and adaptive policies may
+            # have just moved every deadline earlier. Spurious wakeups only
+            # cost one due-scan.
+            self._cv.notify_all()
+        return fut
 
     # -- dispatch policy ---------------------------------------------------
+    @staticmethod
+    def _memoized(memo: dict, key, resolve):
+        """Generation-checked memo read: entries are stored as
+        ``(generation, value)`` and only trusted while the autotune cache
+        is still at that generation.
+
+        The generation is captured BEFORE resolving, so a retune that
+        lands mid-resolution leaves a tuple with a stale generation behind
+        — the next read re-resolves instead of serving pre-retune values
+        forever. (A clear-on-mismatch scheme has a lost-invalidation race:
+        a thread descheduled between resolving and storing would write an
+        old value into a freshly-cleared memo.) Called under no lock; dict
+        ops are atomic under the GIL and redundant resolution is benign.
+        """
+        gen = autotune.cache_generation()
+        hit = memo.get(key)
+        if hit is not None and hit[0] == gen:
+            return hit[1]
+        value = resolve()
+        memo[key] = (gen, value)
+        return value
+
     def thresholds_for(self, dtype=None) -> tuple:
         """(cpu_max_n, sharded_min_n) for an operand dtype.
 
         The explicit constructor override wins; otherwise the tuning
         cache's ``dispatch`` namespace is consulted per dtype (a bf16
         crossover legitimately differs from f32 — half the bytes per
-        operand) and memoized for the engine's lifetime.
+        operand) and memoized per cache generation: recording new
+        thresholds mid-process invalidates the memo and reroutes the very
+        next bucket.
         """
         if self._thresholds_override is not None:
             return self._thresholds_override
         key = jnp.dtype(dtype).name if dtype is not None else "any"
-        if key not in self._thresholds_cache:
-            self._thresholds_cache[key] = autotune.dispatch_thresholds(
-                dtype=None if dtype is None else dtype)
-        return self._thresholds_cache[key]
+        return self._memoized(
+            self._thresholds_cache, key,
+            lambda: autotune.dispatch_thresholds(
+                dtype=None if dtype is None else dtype))
 
     @property
     def thresholds(self) -> tuple:
         """The dtype-agnostic thresholds (override or ``any`` cache entry)."""
         return self.thresholds_for(None)
+
+    def _bucket_delay_s(self, key: tuple) -> float:
+        """Flush deadline (seconds) for one traffic class: the engine
+        override, else the tuned per-(op, n, dtype) ``dispatch`` deadline
+        entry, memoized per cache generation like the thresholds."""
+        if self._max_delay_ms is not None:
+            return self._max_delay_ms / 1e3
+        op, n, dtype, _power = key
+        return self._memoized(
+            self._deadline_cache, (op, n, dtype),
+            lambda: autotune.bucket_deadline_ms(op, n, dtype=dtype) / 1e3)
 
     def route_for(self, n: int, batch: int, dtype=None) -> str:
         """Heterogeneous dispatch: which executor serves an (n, batch) bucket.
@@ -295,9 +565,78 @@ class MatFnEngine:
         self.stats["compiles"] += 1
         return key, exe
 
-    # -- batch execution ---------------------------------------------------
+    def warm(self, op: str, n: int, dtype=jnp.float32, power: int = 1,
+             batches=None) -> int:
+        """Precompile everything one traffic class will need.
+
+        Runs the REAL bucket path (one-dispatch assembler, executable,
+        one-dispatch splitter) on zero stacks for every batch size in
+        ``batches`` — default 1..``max_batch``, because the assembler and
+        splitter specialize on the exact member count, not just the padded
+        bucket shape, so a deadline-triggered partial bucket of a size
+        never seen before would otherwise pay its compiles on the latency
+        path. Call before opening traffic (warm chunks count into the
+        engine stats like any other bucket execution); returns the number
+        of chunks warmed.
+        """
+        dtype = jnp.dtype(dtype)
+        if batches is None:
+            batches = range(1, self.max_batch + 1)
+        power = power if op == "matpow" else -1
+        count = 0
+        for b in batches:
+            operands = [jnp.zeros((n, n), dtype) for _ in range(b)]
+            jax.block_until_ready(
+                self._run_chunk(op, n, dtype.name, power, operands))
+            count += 1
+        return count
+
+    # -- bucket execution core (shared by flush() and the daemon) ----------
+    def _run_chunk(self, op: str, n: int, dtype: str, power: int,
+                   operands) -> tuple:
+        """Assemble, execute, and split ONE bucket chunk (<= max_batch).
+
+        Returns the B per-request result rows. This is the single execution
+        core both the synchronous ``flush`` and the daemon scheduler run,
+        which is what keeps daemon answers bit-identical to synchronous
+        ones: same assembly, same executable cache, same routes.
+        """
+        b = len(operands)
+        route = self.route_for(n, b, dtype)
+        bpad = 1 if route == "sharded" else bucket_batch(b, self.max_batch)
+        stack = _assemble(tuple(operands), bpad=bpad)
+        self.stats["padded_slots"] += bpad - b
+        key, exe = self._executable(op, route, bpad, n, dtype, power)
+        if self.profile:
+            # Per-bucket wall time for the stats rows — blocks each bucket,
+            # so profiling serializes execution; leave it off to let
+            # buckets dispatch asynchronously.
+            t0 = time.perf_counter()
+            out = jax.block_until_ready(exe(stack))
+            dt = time.perf_counter() - t0
+        else:
+            out = exe(stack)
+            dt = None
+        rows = _split_rows(out, b=b)   # drops the filler slots too
+        self.stats["buckets"] += 1
+        self.stats["routes"][route] += 1
+        self.stats["last_flush"].append(
+            {"key": key, "requests": b, "padded_batch": bpad,
+             "route": route, "seconds": dt})
+        return rows
+
+    # -- synchronous batch execution ---------------------------------------
     def flush(self) -> List[jax.Array]:
-        """Answer every pending request; results in submission order."""
+        """Answer every pending request; results in submission order.
+
+        Synchronous mode only — the daemon owns its queue and resolves
+        futures instead (``close()`` drains it).
+        """
+        if self._daemon is not None:
+            raise RuntimeError(
+                "flush() is the synchronous API; in daemon mode the "
+                "scheduler resolves futures — use submit().result() "
+                "(close() drains pending work)")
         pending, self._pending = self._pending, []
         results: List[Optional[jax.Array]] = [None] * len(pending)
         groups: dict = {}
@@ -308,41 +647,265 @@ class MatFnEngine:
         for (op, n, dtype, power), members in groups.items():
             for lo in range(0, len(members), self.max_batch):
                 chunk = members[lo:lo + self.max_batch]
-                b = len(chunk)
-                route = self.route_for(n, b, dtype)
-                bpad = 1 if route == "sharded" else bucket_batch(
-                    b, self.max_batch)
-                stack = _assemble(tuple(req.operand for _, req in chunk),
-                                  bpad=bpad)
-                self.stats["padded_slots"] += bpad - b
-                key, exe = self._executable(op, route, bpad, n, dtype, power)
-                if self.profile:
-                    # Per-bucket wall time for the stats rows — blocks each
-                    # bucket, so profiling serializes the flush; leave it
-                    # off to let buckets dispatch asynchronously.
-                    t0 = time.perf_counter()
-                    out = jax.block_until_ready(exe(stack))
-                    dt = time.perf_counter() - t0
-                else:
-                    out = exe(stack)
-                    dt = None
-                rows = _split_rows(out, b=b)   # drops the filler slots too
-                for j, (idx, _) in enumerate(chunk):
-                    results[idx] = rows[j]
-                self.stats["buckets"] += 1
-                self.stats["routes"][route] += 1
-                self.stats["last_flush"].append(
-                    {"key": key, "requests": b, "padded_batch": bpad,
-                     "route": route, "seconds": dt})
+                rows = self._run_chunk(op, n, dtype, power,
+                                       [req.operand for _, req in chunk])
+                for (idx, _), row in zip(chunk, rows):
+                    results[idx] = row
         return results  # type: ignore[return-value]
+
+    # -- continuous-batching daemon ----------------------------------------
+    @property
+    def running(self) -> bool:
+        """True while the scheduler thread is serving submits."""
+        return (self._daemon is not None and self._daemon.is_alive()
+                and not self._closed)
+
+    def start(self) -> "MatFnEngine":
+        """Promote the engine to a continuous-batching daemon.
+
+        Spawns the scheduler thread; from here ``submit`` returns futures
+        and buckets flush on fill-or-deadline. Idempotent while running;
+        a closed engine cannot restart (build a new one — the executable
+        cache is the expensive state and it is per-engine anyway).
+        """
+        with self._cv:
+            if self._closed:
+                raise RuntimeError("engine is closed and cannot restart")
+            if self._daemon is not None:
+                return self
+            if self._pending:
+                raise RuntimeError(
+                    f"{len(self._pending)} synchronous request(s) pending; "
+                    f"flush() before start() — tickets would never resolve")
+            self._clock.bind(self._cv)
+            # Assigned AND started under the lock: from here every submit
+            # routes to the daemon (see the mode check in submit()), and a
+            # concurrent close() can never join a not-yet-started thread.
+            # The scheduler's first action is acquiring this same lock, so
+            # it simply blocks until we release — no deadlock.
+            self._daemon = threading.Thread(target=self._scheduler_main,
+                                            name="matfn-scheduler",
+                                            daemon=True)
+            self._daemon.start()
+        return self
+
+    def __enter__(self) -> "MatFnEngine":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def kick(self, key: Optional[tuple] = None) -> None:
+        """Mark open buckets due now (flush without waiting for fill or
+        deadline): the ``key``'s bucket only, or every open bucket when
+        ``key`` is None. The synchronous convenience calls kick just their
+        own future's ``bucket_key`` so a lone ``engine.matpow(a, p)`` on a
+        busy daemon answers immediately WITHOUT force-flushing bystander
+        classes' half-full buckets."""
+        with self._cv:
+            if key is None:
+                for bucket in self._open_buckets.values():
+                    bucket.forced = True
+            else:
+                bucket = self._open_buckets.get(key)
+                if bucket is not None:
+                    bucket.forced = True
+            self._cv.notify_all()
+
+    def settle(self, timeout: float = 10.0) -> None:
+        """Block until the scheduler has flushed everything currently due
+        and gone idle (waiting for new work or a future deadline).
+
+        Instrumentation/test hook: with a :class:`ManualClock` this makes
+        "the daemon processed that wakeup" a deterministic event. Raises
+        ``TimeoutError`` if the scheduler does not settle in ``timeout``
+        real seconds (a crashed scheduler surfaces here instead of
+        hanging). No-op in synchronous mode.
+        """
+        if self._daemon is None:
+            return
+        deadline = time.monotonic() + timeout
+        with self._cv:
+            while True:
+                if self._scheduler_crash is not None:
+                    raise RuntimeError("scheduler thread crashed") \
+                        from self._scheduler_crash
+                if not self._daemon.is_alive() and not self._open_buckets:
+                    return
+                if self._waiting and not self._any_due(self._clock.now()):
+                    return
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    raise TimeoutError("scheduler did not settle")
+                # Sliced wait: also bounds the case where the scheduler
+                # dies without a final notify.
+                self._cv.wait(min(remaining, 0.05))
+
+    def close(self, drain: bool = True, timeout: Optional[float] = None):
+        """Stop the daemon. Idempotent; synchronous engines just close.
+
+        ``drain=True`` (default): the scheduler flushes EVERY pending
+        bucket — partial or not — before exiting, so no submitted future is
+        ever dropped; errors still resolve futures (as
+        :class:`BucketExecutionError`), never vanish. ``drain=False``
+        fails every pending future with ``CancelledError`` and exits
+        without running them. New submits are rejected as soon as close
+        begins.
+
+        With a ``timeout``, a scheduler that has not drained in time
+        raises ``TimeoutError`` (the engine stays closed to new submits and
+        the thread keeps draining in the background — futures may still
+        resolve) instead of silently reporting a completed drain.
+        """
+        if self._daemon is None:
+            self._closed = True
+            return
+        cancelled: List[_Bucket] = []
+        with self._cv:
+            if not drain and not self._closing:
+                cancelled = list(self._open_buckets.values())
+                self._open_buckets.clear()
+            self._closing = True
+            self._cv.notify_all()
+        for bucket in cancelled:
+            err = CancelledError(f"engine closed with drain=False; bucket "
+                                 f"{bucket.key} dropped")
+            for fut, _ in bucket.members:
+                if not fut.done():
+                    fut.set_exception(err)
+        self._daemon.join(timeout)
+        self._closed = True
+        if self._daemon.is_alive():
+            raise TimeoutError(
+                f"scheduler still draining after {timeout}s; engine is "
+                f"closed to new submits, pending futures may yet resolve")
+
+    # -- scheduler internals -----------------------------------------------
+    def _any_due(self, now: float) -> bool:
+        return self._closing or any(
+            b.forced or self._policy.due(b.view(), now, self.max_batch)
+            for b in self._open_buckets.values())
+
+    def _take_due(self, now: float) -> List[tuple]:
+        """Pop every bucket that must flush now; returns (bucket, trigger)
+        pairs. Under ``_closing`` everything pending drains. Every popped
+        bucket is registered in ``_in_flight`` BEFORE this returns (even if
+        a user policy's ``due`` raises mid-scan), so the crash handler can
+        always reach it."""
+        due = []
+        for key in list(self._open_buckets):
+            bucket = self._open_buckets[key]
+            if self._closing:
+                trigger = "drain"
+            elif bucket.forced:
+                trigger = "kick"
+            elif self._policy.due(bucket.view(), now, self.max_batch):
+                trigger = ("fill" if len(bucket.members) >= self.max_batch
+                           else "deadline")
+            else:
+                continue
+            del self._open_buckets[key]
+            self._in_flight.append(bucket)
+            due.append((bucket, trigger))
+        return due
+
+    def _next_timeout(self, now: float) -> Optional[float]:
+        """Seconds until the earliest bucket deadline (None: no buckets)."""
+        if not self._open_buckets:
+            return None
+        earliest = min(self._policy.deadline(b.view(), self.max_batch)
+                       for b in self._open_buckets.values())
+        return max(earliest - now, 0.0)
+
+    def _scheduler_main(self) -> None:
+        try:
+            self._scheduler_loop()
+        except BaseException as exc:  # never die silently: fail what's left
+            with self._cv:
+                self._scheduler_crash = exc
+                leftovers = (list(self._in_flight)
+                             + list(self._open_buckets.values()))
+                self._open_buckets.clear()
+                self._in_flight.clear()
+                self._cv.notify_all()
+            for bucket in leftovers:
+                err = BucketExecutionError(bucket.key, exc)
+                for fut, _ in bucket.members:
+                    if not fut.done():
+                        fut.set_exception(err)
+
+    def _scheduler_loop(self) -> None:
+        """Fill-or-deadline scheduling: sleep until the earliest deadline
+        (or a submit/kick/close wakeup), flush what is due, repeat.
+
+        Buckets execute OUTSIDE the lock, so producers keep assembling the
+        next buckets while the device crunches the current ones — and
+        because execution dispatches asynchronously (``profile=False``),
+        futures resolve with in-flight arrays and the host moves straight
+        on to the next bucket: device work overlaps host-side assembly.
+        """
+        while True:
+            with self._cv:
+                while True:
+                    now = self._clock.now()
+                    due = self._take_due(now)
+                    if due:
+                        break
+                    if self._closing:      # drained: nothing left to take
+                        return
+                    self._waiting = True
+                    self._cv.notify_all()  # settle() handshake
+                    try:
+                        self._clock.wait(self._cv, self._next_timeout(now))
+                    finally:
+                        self._waiting = False
+            for bucket, trigger in due:
+                self._execute_bucket(bucket, trigger)
+                self._in_flight.remove(bucket)   # fully resolved
+
+    def _execute_bucket(self, bucket: _Bucket, trigger: str) -> None:
+        """Run one popped bucket and resolve its futures.
+
+        An executor exception resolves every future of the FAILING CHUNK
+        with a :class:`BucketExecutionError` naming the bucket key (the
+        fix for errors surfacing only on the calling thread — on a daemon
+        there is no calling thread to surface them to) and leaves the
+        scheduler alive for the other buckets.
+        """
+        op, n, dtype, power = bucket.key
+        self.stats["flush_triggers"][trigger] += 1
+        members = bucket.members
+        for lo in range(0, len(members), self.max_batch):
+            chunk = members[lo:lo + self.max_batch]
+            try:
+                rows = self._run_chunk(op, n, dtype, power,
+                                       [req.operand for _, req in chunk])
+            except Exception as exc:
+                err = BucketExecutionError(bucket.key, exc)
+                for fut, _ in chunk:
+                    fut.set_exception(err)
+                continue
+            for (fut, _), row in zip(chunk, rows):
+                fut.set_result(row)
+        rows_log = self.stats["last_flush"]
+        if len(rows_log) > _LAST_FLUSH_ROWS:
+            del rows_log[:len(rows_log) - _LAST_FLUSH_ROWS]
 
     # -- convenience single-request API ------------------------------------
     def matpow(self, a: jax.Array, power: int) -> jax.Array:
-        """Synchronous A^power through the engine (flushes the queue)."""
+        """Synchronous A^power through the engine (flushes the queue; in
+        daemon mode kicks the scheduler and waits on the future)."""
         ticket = self.submit("matpow", a, power=power)
+        if isinstance(ticket, MatFnFuture):
+            self.kick(ticket.bucket_key)
+            return ticket.result()
         return self.flush()[ticket]
 
     def expm(self, a: jax.Array) -> jax.Array:
-        """Synchronous e^A through the engine (flushes the queue)."""
+        """Synchronous e^A through the engine (flushes the queue; in daemon
+        mode kicks the scheduler and waits on the future)."""
         ticket = self.submit("expm", a)
+        if isinstance(ticket, MatFnFuture):
+            self.kick(ticket.bucket_key)
+            return ticket.result()
         return self.flush()[ticket]

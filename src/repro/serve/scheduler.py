@@ -1,0 +1,205 @@
+"""Flush policies and clocks for the continuous-batching matfn daemon.
+
+The daemon (:class:`repro.serve.matfn.MatFnEngine` in started mode) holds
+one open bucket per ``(op, n, dtype, power)`` traffic class and must decide
+*when* each bucket stops waiting for more requests and executes. That
+decision is a pluggable strategy so deployments can trade latency against
+batch occupancy without touching the engine:
+
+  * :class:`FillOrDeadline` — flush when the bucket reaches ``max_batch``
+    members OR when its oldest request has waited ``max_delay_s`` (the
+    classic continuous-batching rule; the per-bucket delay comes from the
+    tuning cache's ``dispatch`` namespace, see
+    ``autotune.bucket_deadline_ms``).
+  * :class:`AdaptiveDeadline` — same fill rule, but the deadline shrinks
+    with the measured arrival rate: when requests arrive fast enough to
+    plausibly fill the bucket soon, waiting the full tuned delay only adds
+    latency; when traffic is sparse, waiting longer than the expected fill
+    time is pointless, so the delay clamps to the tuned maximum.
+
+Both consult time through a :class:`Clock` so the engine's deadline
+behavior is testable without sleeps: :class:`SystemClock` is the real
+monotonic clock, :class:`ManualClock` only moves when a test calls
+``advance`` (which also wakes the scheduler), making "the deadline passed"
+a deterministic event instead of a race against the wall clock.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import List, Optional
+
+__all__ = [
+    "BucketView", "FlushPolicy", "FillOrDeadline", "AdaptiveDeadline",
+    "Clock", "SystemClock", "ManualClock",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketView:
+    """Read-only snapshot of one open bucket, as policies see it.
+
+    ``first_ts`` is the clock time the bucket's OLDEST pending request
+    arrived (the latency-critical member); ``max_delay_s`` is the tuned
+    flush-by delay for this traffic class (engine override or the
+    ``dispatch`` namespace's deadline entry).
+    """
+    key: tuple
+    size: int
+    first_ts: float
+    max_delay_s: float
+
+
+class FlushPolicy:
+    """When does a pending bucket flush?
+
+    The engine calls ``observe`` under its lock on every submit (stateful
+    policies track arrivals there), ``due`` when deciding what to flush
+    now, and ``deadline`` to compute how long the scheduler may sleep
+    before *some* bucket needs service. ``deadline`` must be consistent
+    with ``due``: a bucket is due once ``now >= deadline(view)`` (or it
+    filled), otherwise the scheduler could sleep past a flush or spin.
+    """
+
+    def observe(self, view: BucketView, now: float) -> None:
+        """One request just joined ``view``'s bucket (stateless: ignore)."""
+
+    def deadline(self, view: BucketView, max_batch: int) -> float:
+        """Absolute clock time by which this bucket must flush."""
+        raise NotImplementedError
+
+    def due(self, view: BucketView, now: float, max_batch: int) -> bool:
+        """Flush now? Full buckets are always due; otherwise the deadline
+        decides."""
+        return view.size >= max_batch or now >= self.deadline(view, max_batch)
+
+
+class FillOrDeadline(FlushPolicy):
+    """Flush on fill OR when the oldest request has waited its tuned delay.
+
+    The deadline is anchored to the bucket's first arrival, so one slow
+    trickle of requests cannot starve the oldest member: it waits at most
+    ``max_delay_s`` regardless of how many stragglers join behind it.
+    """
+
+    def deadline(self, view: BucketView, max_batch: int) -> float:
+        return view.first_ts + view.max_delay_s
+
+
+class AdaptiveDeadline(FlushPolicy):
+    """Fill-or-deadline with the delay adapted to the recent arrival rate.
+
+    Tracks an EWMA of the inter-arrival gap across all submits (one stream
+    per engine — serving traffic is interleaved anyway). The effective
+    delay for a bucket is the expected time to FILL it from empty
+    (``gap * max_batch``), clamped to ``[min_delay_s, view.max_delay_s]``:
+
+      * hot traffic (small gap): the bucket will fill almost immediately,
+        so the deadline collapses toward ``min_delay_s`` and latency stays
+        near the batch-formation floor instead of the tuned maximum;
+      * sparse traffic (large gap): the bucket would never fill, so there
+        is no point waiting — the delay clamps at the tuned maximum and
+        requests leave after ``max_delay_s`` like the static policy.
+
+    Until two arrivals have been seen there is no gap estimate and the
+    policy behaves exactly like :class:`FillOrDeadline`.
+    """
+
+    def __init__(self, min_delay_s: float = 1e-4, smoothing: float = 0.25):
+        if not (0.0 < smoothing <= 1.0):
+            raise ValueError(f"smoothing must be in (0, 1], got {smoothing}")
+        if min_delay_s <= 0.0:
+            raise ValueError(f"min_delay_s must be > 0, got {min_delay_s}")
+        self.min_delay_s = float(min_delay_s)
+        self.smoothing = float(smoothing)
+        self._gap: Optional[float] = None
+        self._last: Optional[float] = None
+
+    def observe(self, view: BucketView, now: float) -> None:
+        if self._last is not None:
+            gap = max(now - self._last, 0.0)
+            self._gap = gap if self._gap is None else \
+                (1.0 - self.smoothing) * self._gap + self.smoothing * gap
+        self._last = now
+
+    def effective_delay(self, view: BucketView, max_batch: int) -> float:
+        if self._gap is None:
+            return view.max_delay_s
+        return min(view.max_delay_s,
+                   max(self.min_delay_s, self._gap * max_batch))
+
+    def deadline(self, view: BucketView, max_batch: int) -> float:
+        return view.first_ts + self.effective_delay(view, max_batch)
+
+
+class Clock:
+    """Time source + scheduler sleep, injectable for deterministic tests.
+
+    ``wait`` is always called with ``cv`` held and must release it while
+    blocking (condition-variable semantics); it may return spuriously —
+    the scheduler recomputes due-ness on every wakeup.
+    """
+
+    def now(self) -> float:
+        raise NotImplementedError
+
+    def wait(self, cv: threading.Condition, timeout: Optional[float]) -> None:
+        raise NotImplementedError
+
+    def bind(self, cv: threading.Condition) -> None:
+        """Register a scheduler's condition (manual clocks wake it on
+        ``advance``); the default is a no-op."""
+
+
+class SystemClock(Clock):
+    """The real monotonic clock; ``wait`` is a plain timed cv wait."""
+
+    def now(self) -> float:
+        return time.monotonic()
+
+    def wait(self, cv: threading.Condition, timeout: Optional[float]) -> None:
+        cv.wait(timeout)
+
+
+class ManualClock(Clock):
+    """Deterministic test clock: time moves ONLY via ``advance``.
+
+    ``wait`` ignores the requested timeout entirely and blocks until
+    something notifies the scheduler (a submit, a close, or ``advance``) —
+    so a deadline can never expire behind a test's back, and "not flushed
+    before the deadline" is an exact assertion rather than a race.
+    ``advance`` moves time and then wakes every bound scheduler so it
+    re-evaluates its buckets against the new now.
+    """
+
+    def __init__(self, start: float = 0.0):
+        self._lock = threading.Lock()
+        self._now = float(start)
+        self._cvs: List[threading.Condition] = []
+
+    def now(self) -> float:
+        with self._lock:
+            return self._now
+
+    def wait(self, cv: threading.Condition, timeout: Optional[float]) -> None:
+        del timeout  # deadlines fire on advance(), never on wall time
+        cv.wait()
+
+    def bind(self, cv: threading.Condition) -> None:
+        with self._lock:
+            if cv not in self._cvs:
+                self._cvs.append(cv)
+
+    def advance(self, dt: float) -> float:
+        """Move time forward and wake every bound scheduler; returns now."""
+        if dt < 0:
+            raise ValueError(f"cannot advance time backwards ({dt})")
+        with self._lock:
+            self._now += float(dt)
+            now, cvs = self._now, list(self._cvs)
+        for cv in cvs:
+            with cv:
+                cv.notify_all()
+        return now
