@@ -35,6 +35,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.serve.admission import POLICIES, AdmissionControl, ShedError
 from repro.serve.matfn import MatFnEngine
 
 
@@ -64,13 +65,23 @@ def run_workload(engine: MatFnEngine, workload):
 
 
 def run_open_loop(engine: MatFnEngine, workload, rate: float, *,
-                  timeout: float = 120.0):
+                  timeout: float = 120.0, lanes=None, arrivals=None):
     """Open-loop traffic against a STARTED daemon engine.
 
     Requests are submitted at their scheduled arrival times ``i / rate``
     regardless of completions (open loop: offered load never backs off when
     the server lags — the regime where a synchronous server's queue grows
-    without bound but continuous batching keeps up).
+    without bound but continuous batching keeps up). ``arrivals`` overrides
+    the uniform schedule with explicit per-request offsets in seconds from
+    the start (bursty traces); ``lanes`` optionally names the admission
+    lane per request (default all ``"bulk"``).
+
+    Shedding is part of the measured behavior, not an error: a
+    reject-newest shed raises :class:`ShedError` synchronously at submit,
+    a reject-oldest / deadline-aware shed resolves an already-admitted
+    future with it — both land the ShedError in that request's
+    ``results`` slot with a ``None`` latency, and the shed total is
+    reported in the returned info dict. Any OTHER failure still raises.
 
     Latency is measured the way a load-generator client observes it: a
     CONCURRENT collector thread waits on each future in submission order,
@@ -87,12 +98,19 @@ def run_open_loop(engine: MatFnEngine, workload, rate: float, *,
     (exact per-request completion, no collector-position skew, at the cost
     of serializing buckets).
 
-    Returns ``(results, latencies_s, wall_s)`` in submission order.
+    Returns ``(results, latencies_s, wall_s, info)`` with results and
+    latencies in submission order; ``wall_s`` covers submit through last
+    collection, and ``info`` carries ``shed`` (total shed count) and
+    ``submit_wall_s`` (the submission window alone — what the ACHIEVED
+    offered rate is measured over, since the drain tail after the last
+    submit is the server's latency, not the generator's pace).
     """
     if not engine.running:
         raise RuntimeError("run_open_loop needs a started daemon engine")
     profiled = engine.profile
     n = len(workload)
+    if lanes is None:
+        lanes = ["bulk"] * n
     results, lats = [None] * n, [None] * n
     inbox: "queue.Queue" = queue.Queue()
     collector_error = []
@@ -104,7 +122,11 @@ def run_open_loop(engine: MatFnEngine, workload, rate: float, *,
                 if item is None:           # sentinel: generator is done
                     return
                 i, fut, t0 = item
-                r = fut.result(timeout=timeout)
+                try:
+                    r = fut.result(timeout=timeout)
+                except ShedError as exc:   # reject-oldest revoked this one
+                    results[i] = exc
+                    continue
                 jax.block_until_ready(r)
                 done = fut.resolved_at if profiled else time.perf_counter()
                 results[i] = r
@@ -115,15 +137,23 @@ def run_open_loop(engine: MatFnEngine, workload, rate: float, *,
     collector = threading.Thread(target=collect, name="matserve-collect")
     collector.start()
     t_start = time.perf_counter()
+    submit_wall = 0.0
     try:
         for i, (op, a, power) in enumerate(workload):
-            target = t_start + i / rate
+            target = t_start + (arrivals[i] if arrivals is not None
+                                else i / rate)
             while True:
                 remaining = target - time.perf_counter()
                 if remaining <= 0:
                     break
                 time.sleep(min(remaining, 5e-4))
-            fut = engine.submit(op, a, power=power)
+            try:
+                fut = engine.submit(op, a, power=power, priority=lanes[i])
+            except ShedError as exc:       # reject-newest: shed at the door
+                results[i] = exc
+                continue
+            finally:
+                submit_wall = time.perf_counter() - t_start
             inbox.put((i, fut, time.perf_counter()))
     finally:
         # Always unblock the collector — a submit raising mid-loop must
@@ -132,7 +162,9 @@ def run_open_loop(engine: MatFnEngine, workload, rate: float, *,
         collector.join()
     if collector_error:
         raise collector_error[0]
-    return results, lats, time.perf_counter() - t_start
+    shed = sum(1 for r in results if isinstance(r, ShedError))
+    info = {"shed": shed, "submit_wall_s": submit_wall}
+    return results, lats, time.perf_counter() - t_start, info
 
 
 def _verify(workload, results):
@@ -151,6 +183,8 @@ def _verify(workload, results):
 
     worst = 0.0
     for (op, a, power), got in zip(workload, results):
+        if isinstance(got, ShedError):     # shed requests have no answer
+            continue
         want = fn_for(op, power)(a)
         worst = max(worst, float(jnp.max(jnp.abs(
             got.astype(jnp.float32) - want.astype(jnp.float32)))))
@@ -162,40 +196,71 @@ def percentile(xs, q):
     return float(np.percentile(np.asarray(xs, np.float64), q))
 
 
+def _parse_capacity(spec):
+    """``"bulk=96,latency=32"`` -> AdmissionControl capacity mapping
+    (unnamed lanes stay unbounded). ``None``/empty -> all unbounded."""
+    caps = {}
+    if spec:
+        for part in spec.split(","):
+            lane, _, val = part.partition("=")
+            caps[lane.strip()] = int(val)
+    return caps
+
+
 def _daemon_main(args, workload):
     from repro.serve.scheduler import AdaptiveDeadline, FillOrDeadline
 
     policy = AdaptiveDeadline() if args.policy == "adaptive" \
         else FillOrDeadline()
+    caps = _parse_capacity(args.capacity)
+    admission = AdmissionControl(
+        capacity={"bulk": caps.get("bulk"), "latency": caps.get("latency")},
+        policy=POLICIES[args.admission]())
     # profile=True: futures resolve at device completion, so the latency
     # report measures finished answers (serializes buckets; the report is
     # the point of the driver).
     engine = MatFnEngine(interpret=args.interpret, max_batch=args.max_batch,
                          profile=True, policy=policy,
-                         max_delay_ms=args.max_delay_ms)
+                         max_delay_ms=args.max_delay_ms,
+                         admission=admission)
     engine.start()
     # Prewarm every bucket shape the workload can produce so the timed run
     # never pays a compile on the latency path (steady-state serving).
     for op, n, dtype, power in {(op, a.shape[0], a.dtype.name, p)
                                 for op, a, p in workload}:
         engine.warm(op, n, dtype=dtype, power=power)
-    results, lats, wall = run_open_loop(engine, workload, args.rate)
-    stats = engine.stats
+    rng = np.random.default_rng(args.seed + 1)
+    lanes = ["latency" if rng.random() < args.priority_frac else "bulk"
+             for _ in workload]
+    results, lats, wall, info = run_open_loop(engine, workload, args.rate,
+                                              lanes=lanes)
+    shed = info["shed"]
+    snap = engine.stats()
     engine.close()
 
     offered = args.rate
-    achieved = len(workload) / wall
+    served = [t for t in lats if t is not None]
+    achieved = len(served) / wall
     print(f"[matserve] daemon: {len(workload)} requests, offered "
-          f"{offered:.0f} req/s, completed in {wall*1e3:.1f} ms "
+          f"{offered:.0f} req/s, served {len(served)} in {wall*1e3:.1f} ms "
           f"({achieved:.0f} req/s) — policy={args.policy} "
-          f"max_delay_ms={args.max_delay_ms}")
-    print(f"[matserve]   latency p50={percentile(lats, 50)*1e3:.2f} ms "
-          f"p95={percentile(lats, 95)*1e3:.2f} ms "
-          f"max={max(lats)*1e3:.2f} ms")
-    trig = stats["flush_triggers"]
-    print(f"[matserve]   buckets={stats['buckets']} "
-          f"compiles={stats['compiles']} flush_triggers={trig} "
-          f"routes={stats['routes']}")
+          f"max_delay_ms={args.max_delay_ms} "
+          f"admission={snap['admission_policy']} shed={shed}")
+    if served:
+        print(f"[matserve]   latency p50={percentile(served, 50)*1e3:.2f} ms "
+              f"p95={percentile(served, 95)*1e3:.2f} ms "
+              f"max={max(served)*1e3:.2f} ms")
+    trig = snap["flush_triggers"]
+    print(f"[matserve]   buckets={snap['buckets']} "
+          f"compiles={snap['compiles']} flush_triggers={trig} "
+          f"routes={snap['routes']} stragglers={snap['stragglers']} "
+          f"retries={snap['retries']}")
+    for lane, row in snap["lanes"].items():
+        p95 = "n/a" if row["p95_ms"] is None else f"{row['p95_ms']:.2f} ms"
+        print(f"[matserve]   lane {lane:8s} submitted={row['submitted']} "
+              f"shed={row['shed']} flushed={row['flushed']} "
+              f"retried={row['retried']} peak_depth={row['peak_depth']} "
+              f"p95={p95}")
     if args.verify:
         _verify(workload, results)
     return 0
@@ -263,10 +328,21 @@ def main(argv=None):
                          "dispatch namespace)")
     ap.add_argument("--policy", choices=("fill", "adaptive"), default="fill",
                     help="daemon flush policy (docs/serving.md)")
+    ap.add_argument("--admission", choices=sorted(POLICIES),
+                    default="reject-newest",
+                    help="daemon mode: shed policy on lane overflow")
+    ap.add_argument("--capacity", default="",
+                    help="daemon mode: per-lane queue bounds, e.g. "
+                         "'bulk=96,latency=32' (default: unbounded)")
+    ap.add_argument("--priority-frac", type=float, default=0.0,
+                    help="daemon mode: fraction of requests submitted on "
+                         "the latency lane")
     args = ap.parse_args(argv)
 
     if args.daemon and args.rate <= 0:
         ap.error("--rate must be > 0 requests/second")
+    if not 0.0 <= args.priority_frac <= 1.0:
+        ap.error("--priority-frac must be in [0, 1]")
     if args.max_delay_ms is not None and args.max_delay_ms <= 0:
         ap.error("--max-delay-ms must be > 0")
     sizes = [int(s) for s in args.sizes.split(",")]

@@ -22,6 +22,7 @@ single-process-testable pieces of that story:
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 import statistics
 import time
@@ -46,12 +47,15 @@ class Watchdog:
     a step exceeds timeout_factor x median over the last ``window`` steps."""
 
     def __init__(self, *, timeout_factor: float = 3.0, window: int = 32,
-                 min_samples: int = 5):
+                 min_samples: int = 5, max_events: int = 1024):
         self.timeout_factor = timeout_factor
         self.window = window
         self.min_samples = min_samples
         self._durations: List[float] = []
-        self.events: List[StragglerEvent] = []
+        # Ring buffer, not a list: a long-lived observer (the matfn daemon
+        # watches every bucket flush) must not grow event history without
+        # bound if a deployment straggles chronically.
+        self.events: collections.deque = collections.deque(maxlen=max_events)
 
     def observe(self, step: int, duration_s: float) -> Optional[StragglerEvent]:
         ev = None

@@ -6,8 +6,14 @@
                 continuous-batching daemon (``MatFnEngine.start()``).
 ``scheduler`` — the daemon's pluggable flush policies (fill-or-deadline,
                 arrival-rate-adaptive) and injectable clocks.
+``admission`` — the daemon's front door: bounded per-lane queues, shed
+                policies (reject-newest / reject-oldest / deadline-aware),
+                priority-lane SLO targets, and the typed ``ShedError``.
 """
 
+from repro.serve.admission import (LANES, POLICIES, AdmissionControl,
+                                   AdmissionPolicy, DeadlineAware,
+                                   RejectNewest, RejectOldest, ShedError)
 from repro.serve.matfn import (BucketExecutionError, MatFnEngine,
                                MatFnFuture, MatFnRequest, bucket_batch)
 from repro.serve.scheduler import (AdaptiveDeadline, FillOrDeadline,
@@ -18,4 +24,6 @@ __all__ = [
     "bucket_batch",
     "FlushPolicy", "FillOrDeadline", "AdaptiveDeadline",
     "SystemClock", "ManualClock",
+    "LANES", "POLICIES", "AdmissionControl", "AdmissionPolicy",
+    "RejectNewest", "RejectOldest", "DeadlineAware", "ShedError",
 ]

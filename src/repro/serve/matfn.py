@@ -36,16 +36,43 @@ that pipeline as a service layer over the reproduction's chain executors:
     (never lost on a daemon thread), and :meth:`MatFnEngine.close` drains
     every pending bucket before the thread exits.
 
+  * **Admission control** (:mod:`repro.serve.admission`): every request
+    rides a LANE (``"bulk"`` default, ``submit(..., priority="latency")``
+    for latency-critical traffic); each lane has a bounded queue whose
+    overflow is resolved by a pluggable policy (reject-newest /
+    reject-oldest / deadline-aware) — the shed side fails fast with a
+    typed :class:`~repro.serve.admission.ShedError` carrying lane, queue
+    depth, and capacity, so overload degrades into attributable
+    rejections instead of universal timeouts. Latency-lane buckets run
+    under a per-lane SLO deadline cap and, above
+    ``AdmissionControl.bypass_n``, skip bucket assembly entirely (the
+    ``"priority"`` flush trigger); the scheduler flushes due latency
+    buckets before bulk ones.
+  * **Fault wiring** (:mod:`repro.runtime.fault`): every bucket flush is
+    timed under a :class:`~repro.runtime.fault.Watchdog` — a straggling
+    flush lands a ``StragglerEvent`` in the stats (counted + logged, so
+    chronic stragglers are attributable per bucket key); an executor
+    exception retries through :func:`~repro.runtime.fault.retry_step`
+    with the bucket's cached executables EVICTED per attempt (a poisoned
+    compile-cache entry self-heals instead of re-raising), and only after
+    bounded retries fails the bucket's futures with
+    :class:`BucketExecutionError`.
+  * **Observability**: ``engine.stats`` remains the live counter dict;
+    CALLING it — ``engine.stats()`` — returns a consistent snapshot with
+    per-lane submitted/shed/retried/flushed counters, live + peak queue
+    depths, and p50/p95 latency per lane.
+
 Flush policies and the injectable clock live in
 :mod:`repro.serve.scheduler`. Driver: ``python -m repro.launch.matserve``
 (``--daemon`` for open-loop traffic against the daemon); bench:
-``benchmarks/matfn_bench.py`` (``--open-loop`` for latency-vs-load, writes
-``BENCH_matfn.json``). See ``docs/serving.md`` for the policy details and
-the paper mapping.
+``benchmarks/matfn_bench.py`` (``--open-loop`` for latency-vs-load and the
+mixed-lane overload trace, writes ``BENCH_matfn.json``). See
+``docs/serving.md`` for the policy details and the paper mapping.
 """
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 import functools
 import threading
@@ -62,11 +89,15 @@ from jax import lax
 from repro.core.batched import batched_matpow
 from repro.core.expm import expm as _expm
 from repro.kernels import autotune
+from repro.runtime.fault import Watchdog, retry_step
+from repro.serve.admission import (LANES, AdmissionControl, PendingView,
+                                   ShedError)
 from repro.serve.scheduler import (BucketView, FillOrDeadline, FlushPolicy,
                                    SystemClock)
 
 __all__ = ["MatFnRequest", "MatFnEngine", "MatFnFuture",
-           "BucketExecutionError", "bucket_batch", "OPS", "ROUTES"]
+           "BucketExecutionError", "ShedError", "bucket_batch",
+           "OPS", "ROUTES", "TRIGGERS"]
 
 #: Ops the engine serves.
 OPS = ("matpow", "expm")
@@ -74,12 +105,21 @@ OPS = ("matpow", "expm")
 #: Dispatch routes a bucket can take (see :meth:`MatFnEngine.route_for`).
 ROUTES = ("xla", "chain", "sharded")
 
-#: Flush triggers the daemon distinguishes in ``stats["flush_triggers"]``.
-TRIGGERS = ("fill", "deadline", "kick", "drain")
+#: Flush triggers the daemon distinguishes in ``stats["flush_triggers"]``
+#: (``priority`` = a latency-lane request at n >= bypass_n forced its
+#: bucket due on arrival).
+TRIGGERS = ("fill", "deadline", "kick", "drain", "priority")
 
 #: Bound on ``stats["last_flush"]`` in daemon mode (a long-lived daemon
 #: must not grow an unbounded report list; sync ``flush`` resets it).
 _LAST_FLUSH_ROWS = 256
+
+#: Per-lane latency samples retained for the ``stats()`` p50/p95 (ring
+#: buffer — a long-lived daemon must not grow an unbounded sample list).
+_LANE_LAT_SAMPLES = 4096
+
+#: Straggler-event strings retained in the ``stats()`` snapshot.
+_STRAGGLER_EVENTS = 32
 
 _UNSET = object()
 
@@ -116,11 +156,14 @@ class MatFnFuture:
     open-loop benchmarks can measure latency without polling.
     """
 
-    __slots__ = ("bucket_key", "resolved_at", "_event", "_lock", "_result",
-                 "_exception")
+    __slots__ = ("bucket_key", "lane", "submitted_at", "resolved_at",
+                 "_event", "_lock", "_result", "_exception")
 
-    def __init__(self, bucket_key: Optional[tuple] = None):
+    def __init__(self, bucket_key: Optional[tuple] = None,
+                 lane: str = "bulk"):
         self.bucket_key = bucket_key
+        self.lane = lane
+        self.submitted_at: Optional[float] = None   # engine-clock admit time
         self.resolved_at: Optional[float] = None
         self._event = threading.Event()
         self._lock = threading.Lock()
@@ -213,14 +256,29 @@ class MatFnRequest:
 class _Bucket:
     """One OPEN daemon bucket: futures waiting to be batched."""
     key: tuple
+    lane: str                    # admission class ("bulk" / "latency")
     members: list                # [(MatFnFuture, MatFnRequest), ...]
     first_ts: float              # clock time of the oldest pending request
     max_delay_s: float           # tuned flush-by delay for this class
-    forced: bool = False         # kick()/convenience API: flush at next poll
+    # kick()/priority bypass: the trigger name that forced this bucket due
+    # at the next poll, or None while it batches normally.
+    forced: Optional[str] = None
 
     def view(self) -> BucketView:
         return BucketView(self.key, len(self.members), self.first_ts,
-                          self.max_delay_s)
+                          self.max_delay_s, self.lane)
+
+
+class _Stats(dict):
+    """Engine counters, indexable like the plain dict it always was
+    (``engine.stats["requests"]``) and CALLABLE for a consistent snapshot
+    (``engine.stats()`` — per-lane counters, queue depths, p50/p95; see
+    :meth:`MatFnEngine._stats_snapshot`)."""
+
+    snapshot = None   # bound by the engine
+
+    def __call__(self) -> dict:
+        return self.snapshot()
 
 
 # One-dispatch bucket assembly: an eager ``jnp.stack`` over B small device
@@ -338,11 +396,20 @@ class MatFnEngine:
                  thresholds: Optional[tuple] = None,
                  max_delay_ms: Optional[float] = None,
                  policy: Optional[FlushPolicy] = None,
-                 clock=None):
+                 clock=None,
+                 admission: Optional[AdmissionControl] = None,
+                 watchdog: Optional[Watchdog] = None,
+                 retries: int = 1,
+                 retry_backoff_s: float = 0.0):
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
         if max_delay_ms is not None and not max_delay_ms > 0:
             raise ValueError(f"max_delay_ms must be > 0, got {max_delay_ms}")
+        if retries < 0:
+            raise ValueError(f"retries must be >= 0, got {retries}")
+        if retry_backoff_s < 0:
+            raise ValueError(
+                f"retry_backoff_s must be >= 0, got {retry_backoff_s}")
         self.mesh = mesh
         self.interpret = bool(interpret)
         self.max_batch = int(max_batch)
@@ -353,6 +420,13 @@ class MatFnEngine:
             else float(max_delay_ms)
         self._policy = policy if policy is not None else FillOrDeadline()
         self._clock = clock if clock is not None else SystemClock()
+        self._admission = admission if admission is not None \
+            else AdmissionControl()
+        # Default watchdog ON: straggler detection costs one median over a
+        # 32-entry window per flush and buys the self-healing eviction.
+        self._watchdog = watchdog if watchdog is not None else Watchdog()
+        self.retries = int(retries)
+        self.retry_backoff_s = float(retry_backoff_s)
         # Memoized dispatch resolutions, each stored WITH the autotune
         # generation it was resolved under and validated on read (a retuned
         # cache reroutes the running engine, not just the next one).
@@ -373,20 +447,46 @@ class MatFnEngine:
         self._closed = False
         self._waiting = False             # scheduler idle (settle handshake)
         self._scheduler_crash: Optional[BaseException] = None
-        self.stats = {"requests": 0, "buckets": 0, "compiles": 0,
-                      "cache_hits": 0, "padded_slots": 0,
-                      "routes": {r: 0 for r in ROUTES},
-                      "flush_triggers": {t: 0 for t in TRIGGERS},
-                      "last_flush": []}
+        # Admission bookkeeping: admitted-but-unflushed requests per lane
+        # (the bounded front-door queue) + per-lane latency samples for
+        # the stats() p50/p95 (engine-clock submit -> resolution).
+        self._lane_depth = {lane: 0 for lane in LANES}
+        self._lane_lat = {lane: collections.deque(maxlen=_LANE_LAT_SAMPLES)
+                          for lane in LANES}
+        self._straggler_log = collections.deque(maxlen=_STRAGGLER_EVENTS)
+        self.stats = _Stats({
+            "requests": 0, "buckets": 0, "compiles": 0,
+            "cache_hits": 0, "padded_slots": 0,
+            "stragglers": 0, "retries": 0,
+            "routes": {r: 0 for r in ROUTES},
+            "flush_triggers": {t: 0 for t in TRIGGERS},
+            "lanes": {lane: {"submitted": 0, "shed": 0, "retried": 0,
+                             "flushed": 0, "peak_depth": 0}
+                      for lane in LANES},
+            "last_flush": []})
+        self.stats.snapshot = self._stats_snapshot
 
     # -- request intake ----------------------------------------------------
-    def submit(self, op: str, operand, *, power: int = 1):
+    def submit(self, op: str, operand, *, power: int = 1,
+               priority: str = "bulk"):
         """Queue one request.
 
         Synchronous mode returns the request's int index into the next
         ``flush()``; daemon mode (after :meth:`start`) returns a
         :class:`MatFnFuture` immediately — the scheduler thread resolves it
         when the request's bucket fills or its deadline passes.
+
+        ``priority`` names the admission lane: ``"bulk"`` (default) or
+        ``"latency"`` for latency-critical traffic — latency-lane buckets
+        flush under the lane's SLO deadline cap, are scheduled before bulk
+        buckets, and above ``AdmissionControl.bypass_n`` skip bucket
+        assembly entirely. When the lane's bounded queue is full the
+        admission policy decides who pays: ``submit`` raises
+        :class:`~repro.serve.admission.ShedError` (reject-newest) or an
+        already-admitted future resolves with it (reject-oldest /
+        deadline-aware). Lanes only shape the SCHEDULE, never the math —
+        both lanes share the executable cache. In synchronous mode the
+        daemon queue does not exist, so admission does not apply.
 
         ``operand`` may be a jax or numpy array (kept as-is — the bucket
         assembler stacks them in one jitted call) or anything
@@ -400,6 +500,9 @@ class MatFnEngine:
         """
         if self._closed or self._closing:
             raise RuntimeError("engine is closed; no new requests")
+        if priority not in LANES:
+            raise ValueError(f"unknown priority lane {priority!r}; "
+                             f"expected one of {LANES}")
         if not isinstance(operand, (jax.Array, np.ndarray)):
             operand = jnp.asarray(operand)
         elif isinstance(operand, np.ndarray):
@@ -415,17 +518,50 @@ class MatFnEngine:
             if self._daemon is None:
                 self._pending.append(req)
                 self.stats["requests"] += 1
+                self.stats["lanes"][priority]["submitted"] += 1
                 return len(self._pending) - 1
-        return self._submit_daemon(req)
+        return self._submit_daemon(req, priority)
 
-    def _submit_daemon(self, req: MatFnRequest) -> MatFnFuture:
+    def _pending_lane(self, lane: str):
+        """(views, refs) over one lane's admitted-but-unflushed requests,
+        in bucket-iteration order: ``views`` is what policies see,
+        ``refs[i] = (bucket, member_index)`` locates the same request for
+        eviction. Called under the lock."""
+        views, refs = [], []
+        for bucket in self._open_buckets.values():
+            if bucket.lane != lane:
+                continue
+            deadline = bucket.first_ts + bucket.max_delay_s
+            for i, (fut, _req) in enumerate(bucket.members):
+                views.append(PendingView(bucket.key, lane,
+                                         fut.submitted_at, deadline))
+                refs.append((bucket, i))
+        return views, refs
+
+    def _shed_admitted(self, bucket: _Bucket, index: int) -> MatFnFuture:
+        """Evict one admitted member (under the lock): remove it from its
+        bucket, advance the bucket's deadline anchor past it, drop the
+        bucket if it emptied. Returns the victim future (resolved by the
+        caller OUTSIDE the lock)."""
+        fut, _req = bucket.members.pop(index)
+        self._lane_depth[bucket.lane] -= 1
+        if not bucket.members:
+            del self._open_buckets[(bucket.key, bucket.lane)]
+        else:
+            bucket.first_ts = min(m[0].submitted_at for m in bucket.members)
+        return fut
+
+    def _submit_daemon(self, req: MatFnRequest,
+                       lane: str = "bulk") -> MatFnFuture:
         key = req.bucket_key()
-        fut = MatFnFuture(key)
+        fut = MatFnFuture(key, lane)
         # Resolved OUTSIDE the lock: a generation bump makes this read the
         # cache file, and one slow disk read must not stall every producer
         # and the scheduler behind the condition lock. Unused when the
         # bucket already exists — the lookup is memoized.
-        delay_s = self._bucket_delay_s(key)
+        delay_s = self._lane_delay_s(key, lane)
+        victim: Optional[MatFnFuture] = None
+        shed_depth = 0
         with self._cv:
             if self._closing or self._closed:
                 raise RuntimeError("engine is closed; no new requests")
@@ -433,18 +569,61 @@ class MatFnEngine:
                 raise RuntimeError("scheduler thread crashed") \
                     from self._scheduler_crash
             now = self._clock.now()
-            bucket = self._open_buckets.get(key)
-            if bucket is None:
-                bucket = _Bucket(key, [], now, delay_s)
-                self._open_buckets[key] = bucket
+            fut.submitted_at = now
+            cap = self._admission.capacity_for(lane)
+            if cap is not None and self._lane_depth[lane] >= cap:
+                # Overflow: the admission policy picks who pays. Shed
+                # decisions never touch the device — one counter bump and
+                # one exception is the whole cost.
+                views, refs = self._pending_lane(lane)
+                incoming = PendingView(key, lane, now, now + delay_s)
+                idx = self._admission.policy.select_victim(
+                    views, incoming, now)
+                lane_stats = self.stats["lanes"][lane]
+                lane_stats["shed"] += 1
+                shed_depth = self._lane_depth[lane]
+                if idx is None:
+                    raise ShedError(lane, shed_depth, cap,
+                                    self._admission.policy.name, key)
+                victim = self._shed_admitted(*refs[idx])
+            bucket = self._open_buckets.get((key, lane))
+            opened = bucket is None
+            if opened:
+                bucket = _Bucket(key, lane, [], now, delay_s)
+                self._open_buckets[(key, lane)] = bucket
             bucket.members.append((fut, req))
+            self._lane_depth[lane] += 1
+            lane_stats = self.stats["lanes"][lane]
+            lane_stats["submitted"] += 1
+            lane_stats["peak_depth"] = max(lane_stats["peak_depth"],
+                                           self._lane_depth[lane])
             self.stats["requests"] += 1
+            # Priority bypass: above the size threshold a latency request's
+            # own execution dominates any batching win — mark the bucket
+            # due NOW (dedicated "priority" trigger; the scheduler also
+            # orders latency-lane flushes before bulk ones).
+            if (lane == "latency" and bucket.forced is None
+                    and req.n >= self._admission.bypass_n):
+                bucket.forced = "priority"
             self._policy.observe(bucket.view(), now)
-            # Always wake the scheduler: a new bucket changes its sleep
-            # deadline, a filled bucket is due, and adaptive policies may
-            # have just moved every deadline earlier. Spurious wakeups only
-            # cost one due-scan.
-            self._cv.notify_all()
+            # Wake the scheduler only when this submit can change what it
+            # should do: a NEW bucket moves its sleep deadline, a filled
+            # or forced bucket is due now, and an adaptive policy may have
+            # just moved every deadline earlier. The common submit under
+            # load — member #2..#k of an open bucket whose deadline is
+            # anchored at its first arrival — changes nothing the
+            # scheduler's current sleep doesn't already cover, and
+            # skipping the wake there is most of the submit path's cost
+            # (wake -> scan -> re-sleep, ~6x per-submit).
+            if (opened or bucket.forced is not None
+                    or len(bucket.members) >= self.max_batch
+                    or self._policy.wake_on_observe):
+                self._cv.notify_all()
+        if victim is not None:
+            # Outside the lock: set_exception wakes the victim's waiters.
+            self._resolve(victim, exc=ShedError(
+                victim.lane, shed_depth, cap, self._admission.policy.name,
+                victim.bucket_key))
         return fut
 
     # -- dispatch policy ---------------------------------------------------
@@ -503,6 +682,15 @@ class MatFnEngine:
         return self._memoized(
             self._deadline_cache, (op, n, dtype),
             lambda: autotune.bucket_deadline_ms(op, n, dtype=dtype) / 1e3)
+
+    def _lane_delay_s(self, key: tuple, lane: str) -> float:
+        """Effective flush deadline for one (traffic class, lane): the
+        class deadline capped by the lane's SLO target — a latency-lane
+        bucket never waits past its SLO budget, and AdaptiveDeadline only
+        ever shrinks the wait below this cap."""
+        delay_s = self._bucket_delay_s(key)
+        slo_s = self._admission.slo_s_for(lane)
+        return delay_s if slo_s is None else min(delay_s, slo_s)
 
     def route_for(self, n: int, batch: int, dtype=None) -> str:
         """Heterogeneous dispatch: which executor serves an (n, batch) bucket.
@@ -695,22 +883,29 @@ class MatFnEngine:
     def __exit__(self, *exc) -> None:
         self.close()
 
-    def kick(self, key: Optional[tuple] = None) -> None:
+    def kick(self, key: Optional[tuple] = None) -> int:
         """Mark open buckets due now (flush without waiting for fill or
-        deadline): the ``key``'s bucket only, or every open bucket when
-        ``key`` is None. The synchronous convenience calls kick just their
-        own future's ``bucket_key`` so a lone ``engine.matpow(a, p)`` on a
-        busy daemon answers immediately WITHOUT force-flushing bystander
-        classes' half-full buckets."""
+        deadline): the ``key``'s buckets only (both lanes), or every open
+        bucket when ``key`` is None. The synchronous convenience calls
+        kick just their own future's ``bucket_key`` so a lone
+        ``engine.matpow(a, p)`` on a busy daemon answers immediately
+        WITHOUT force-flushing bystander classes' half-full buckets.
+
+        Kicking an empty traffic class is a NO-OP — no bucket is marked,
+        no trigger is counted, and the scheduler is not even woken (a
+        spurious wakeup is cheap, but a kick storm against idle classes
+        should cost nothing). Returns the number of buckets kicked.
+        """
+        kicked = 0
         with self._cv:
-            if key is None:
-                for bucket in self._open_buckets.values():
-                    bucket.forced = True
-            else:
-                bucket = self._open_buckets.get(key)
-                if bucket is not None:
-                    bucket.forced = True
-            self._cv.notify_all()
+            for bucket in self._open_buckets.values():
+                if (key is None or bucket.key == key) \
+                        and bucket.forced is None:
+                    bucket.forced = "kick"
+                    kicked += 1
+            if kicked:
+                self._cv.notify_all()
+        return kicked
 
     def settle(self, timeout: float = 10.0) -> None:
         """Block until the scheduler has flushed everything currently due
@@ -749,8 +944,12 @@ class MatFnEngine:
         ever dropped; errors still resolve futures (as
         :class:`BucketExecutionError`), never vanish. ``drain=False``
         fails every pending future with ``CancelledError`` and exits
-        without running them. New submits are rejected as soon as close
-        begins.
+        without running them — INCLUDING futures of buckets already popped
+        for execution: a wedged executor must not strand an in-flight
+        future until its ``result()`` timeout (the cancellation is
+        tolerant — if the executor finishes first, the real answer wins
+        and the late cancel is a no-op). New submits are rejected as soon
+        as close begins.
 
         With a ``timeout``, a scheduler that has not drained in time
         raises ``TimeoutError`` (the engine stays closed to new submits and
@@ -763,16 +962,22 @@ class MatFnEngine:
         cancelled: List[_Bucket] = []
         with self._cv:
             if not drain and not self._closing:
-                cancelled = list(self._open_buckets.values())
+                # Open buckets are dropped outright; in-flight buckets are
+                # only COPIED — the scheduler still owns them, and their
+                # futures are poisoned best-effort below (the resolution
+                # race against a finishing executor is settled by the
+                # futures' single-assignment lock, whoever wins).
+                cancelled = (list(self._open_buckets.values())
+                             + list(self._in_flight))
                 self._open_buckets.clear()
+                self._lane_depth = {lane: 0 for lane in LANES}
             self._closing = True
             self._cv.notify_all()
         for bucket in cancelled:
             err = CancelledError(f"engine closed with drain=False; bucket "
                                  f"{bucket.key} dropped")
             for fut, _ in bucket.members:
-                if not fut.done():
-                    fut.set_exception(err)
+                self._resolve(fut, exc=err)
         self._daemon.join(timeout)
         self._closed = True
         if self._daemon.is_alive():
@@ -786,27 +991,36 @@ class MatFnEngine:
             b.forced or self._policy.due(b.view(), now, self.max_batch)
             for b in self._open_buckets.values())
 
-    def _take_due(self, now: float) -> List[tuple]:
+    def _take_due(self, now: float,
+                  lane: Optional[str] = None) -> List[tuple]:
         """Pop every bucket that must flush now; returns (bucket, trigger)
-        pairs. Under ``_closing`` everything pending drains. Every popped
-        bucket is registered in ``_in_flight`` BEFORE this returns (even if
-        a user policy's ``due`` raises mid-scan), so the crash handler can
+        pairs with LATENCY-lane buckets first (the priority lane's due
+        work never queues behind bulk flushes taken in the same poll).
+        ``lane`` restricts the scan to one lane (the scheduler's
+        between-buckets preemption check only wants latency work).
+        Under ``_closing`` everything pending drains. Every popped bucket
+        is registered in ``_in_flight`` BEFORE this returns (even if a
+        user policy's ``due`` raises mid-scan), so the crash handler can
         always reach it."""
         due = []
-        for key in list(self._open_buckets):
-            bucket = self._open_buckets[key]
+        for dict_key in list(self._open_buckets):
+            bucket = self._open_buckets[dict_key]
+            if lane is not None and bucket.lane != lane:
+                continue
             if self._closing:
                 trigger = "drain"
-            elif bucket.forced:
-                trigger = "kick"
+            elif bucket.forced is not None:
+                trigger = bucket.forced
             elif self._policy.due(bucket.view(), now, self.max_batch):
                 trigger = ("fill" if len(bucket.members) >= self.max_batch
                            else "deadline")
             else:
                 continue
-            del self._open_buckets[key]
+            del self._open_buckets[dict_key]
+            self._lane_depth[bucket.lane] -= len(bucket.members)
             self._in_flight.append(bucket)
             due.append((bucket, trigger))
+        due.sort(key=lambda bt: 0 if bt[0].lane == "latency" else 1)
         return due
 
     def _next_timeout(self, now: float) -> Optional[float]:
@@ -827,12 +1041,16 @@ class MatFnEngine:
                              + list(self._open_buckets.values()))
                 self._open_buckets.clear()
                 self._in_flight.clear()
+                self._lane_depth = {lane: 0 for lane in LANES}
                 self._cv.notify_all()
             for bucket in leftovers:
                 err = BucketExecutionError(bucket.key, exc)
                 for fut, _ in bucket.members:
-                    if not fut.done():
-                        fut.set_exception(err)
+                    # Tolerant resolution: a close(drain=False) racing this
+                    # crash may have poisoned a future first — a second
+                    # set_exception must not abort the sweep and strand
+                    # the REST of the leftovers unresolved.
+                    self._resolve(fut, exc=err)
 
     def _scheduler_loop(self) -> None:
         """Fill-or-deadline scheduling: sleep until the earliest deadline
@@ -843,6 +1061,14 @@ class MatFnEngine:
         because execution dispatches asynchronously (``profile=False``),
         futures resolve with in-flight arrays and the host moves straight
         on to the next bucket: device work overlaps host-side assembly.
+
+        Between bucket executions the loop re-checks the LATENCY lane: a
+        priority bucket that became due while a bulk flush ran jumps the
+        remaining bulk backlog (preemption at bucket granularity — a
+        latency request waits for at most ONE in-progress bulk flush, not
+        for every bulk bucket popped in the same poll; under overload
+        that is the difference between the priority lane tracking its SLO
+        and inheriting the bulk queue's tail).
         """
         while True:
             with self._cv:
@@ -859,37 +1085,152 @@ class MatFnEngine:
                         self._clock.wait(self._cv, self._next_timeout(now))
                     finally:
                         self._waiting = False
-            for bucket, trigger in due:
+            while due:
+                bucket, trigger = due.pop(0)
                 self._execute_bucket(bucket, trigger)
                 self._in_flight.remove(bucket)   # fully resolved
+                if due and due[0][0].lane != "latency":
+                    with self._cv:
+                        due[:0] = self._take_due(self._clock.now(),
+                                                 lane="latency")
+
+    def _resolve(self, fut: MatFnFuture, value=_UNSET,
+                 exc: Optional[BaseException] = None) -> bool:
+        """Resolve one future, tolerating an earlier resolution (a
+        close(drain=False) cancel or crash sweep racing the executor —
+        single-assignment settles who wins, and the loser must not
+        propagate ``InvalidStateError`` into the scheduler). Successful
+        results feed the per-lane latency samples behind ``stats()``."""
+        try:
+            if exc is not None:
+                fut.set_exception(exc)
+            else:
+                fut.set_result(value)
+        except InvalidStateError:
+            return False
+        if exc is None and fut.submitted_at is not None:
+            self._lane_lat[fut.lane].append(
+                self._clock.now() - fut.submitted_at)
+        return True
+
+    def _evict_class_executables(self, key: tuple) -> int:
+        """Drop every cached executable serving one (op, n, dtype, power)
+        traffic class — all routes and padded batch sizes. The self-heal
+        path: each bounded retry re-resolves the executable, so a
+        poisoned compile-cache entry costs one recompile instead of
+        poisoning the class forever."""
+        op, n, dtype, power = key
+        stale = [k for k in self._executables
+                 if (k[0], k[3], k[4], k[5]) == (op, n, dtype, power)]
+        for k in stale:
+            del self._executables[k]
+        return len(stale)
 
     def _execute_bucket(self, bucket: _Bucket, trigger: str) -> None:
         """Run one popped bucket and resolve its futures.
 
-        An executor exception resolves every future of the FAILING CHUNK
-        with a :class:`BucketExecutionError` naming the bucket key (the
-        fix for errors surfacing only on the calling thread — on a daemon
-        there is no calling thread to surface them to) and leaves the
-        scheduler alive for the other buckets.
+        Each chunk runs under the fault runtime: the flush is wall-timed
+        into the :class:`~repro.runtime.fault.Watchdog` (a straggling
+        flush records a ``StragglerEvent`` into the stats — counted and
+        logged only: legitimate duration variance across batch sizes and
+        first-compile flushes means eviction-on-straggle would recompile
+        healthy executables and FEED the very tail it watches for), and
+        an executor exception retries through
+        :func:`~repro.runtime.fault.retry_step` — each retry evicts the
+        class's cached executables first, so a poisoned compile-cache
+        entry is re-resolved rather than re-raised. Only after
+        ``self.retries`` bounded retries does the FAILING CHUNK resolve
+        with a
+        :class:`BucketExecutionError` naming the bucket key (the fix for
+        errors surfacing only on the calling thread — on a daemon there
+        is no calling thread to surface them to); the scheduler stays
+        alive for the other buckets either way.
         """
         op, n, dtype, power = bucket.key
         self.stats["flush_triggers"][trigger] += 1
+        lane_stats = self.stats["lanes"][bucket.lane]
         members = bucket.members
         for lo in range(0, len(members), self.max_batch):
             chunk = members[lo:lo + self.max_batch]
-            try:
-                rows = self._run_chunk(op, n, dtype, power,
+
+            def run_chunk():
+                # self._run_chunk looked up per attempt (tests monkeypatch
+                # the bound attribute) — the single execution core shared
+                # with the synchronous flush().
+                return self._run_chunk(op, n, dtype, power,
                                        [req.operand for _, req in chunk])
+
+            def on_retry(attempt, exc):
+                self._evict_class_executables(bucket.key)
+                self.stats["retries"] += 1
+                lane_stats["retried"] += len(chunk)
+
+            t0 = time.perf_counter()
+            try:
+                rows = retry_step(run_chunk, retries=self.retries,
+                                  backoff_s=self.retry_backoff_s,
+                                  on_retry=on_retry)
             except Exception as exc:
                 err = BucketExecutionError(bucket.key, exc)
                 for fut, _ in chunk:
-                    fut.set_exception(err)
+                    self._resolve(fut, exc=err)
                 continue
+            finally:
+                event = self._watchdog.observe(self.stats["buckets"],
+                                               time.perf_counter() - t0)
+                if event is not None:
+                    self.stats["stragglers"] += 1
+                    self._straggler_log.append(
+                        f"{event} (bucket {bucket.key}, lane {bucket.lane})")
             for (fut, _), row in zip(chunk, rows):
-                fut.set_result(row)
+                self._resolve(fut, value=row)
+            lane_stats["flushed"] += len(chunk)
         rows_log = self.stats["last_flush"]
         if len(rows_log) > _LAST_FLUSH_ROWS:
             del rows_log[:len(rows_log) - _LAST_FLUSH_ROWS]
+
+    # -- observability -----------------------------------------------------
+    def _stats_snapshot(self) -> dict:
+        """One consistent point-in-time report (what ``engine.stats()``
+        returns): the cumulative counters plus, per lane, the LIVE queue
+        depth, peak depth, and p50/p95 latency over the last
+        ``_LANE_LAT_SAMPLES`` resolutions (engine-clock submit ->
+        resolution — under the serving configuration that is queue wait +
+        assembly + async dispatch, the quantity admission control
+        governs). Taken under the engine lock; cheap enough to poll."""
+
+        def pct(samples, q):
+            if not samples:
+                return None
+            xs = sorted(samples)
+            return xs[min(len(xs) - 1, int(q * (len(xs) - 1) + 0.5))]
+
+        with self._cv:
+            lanes = {}
+            for lane in LANES:
+                row = dict(self.stats["lanes"][lane])
+                row["queue_depth"] = self._lane_depth[lane]
+                samples = list(self._lane_lat[lane])
+                p50, p95 = pct(samples, 0.50), pct(samples, 0.95)
+                row["p50_ms"] = None if p50 is None else p50 * 1e3
+                row["p95_ms"] = None if p95 is None else p95 * 1e3
+                lanes[lane] = row
+            return {
+                "requests": self.stats["requests"],
+                "buckets": self.stats["buckets"],
+                "compiles": self.stats["compiles"],
+                "cache_hits": self.stats["cache_hits"],
+                "padded_slots": self.stats["padded_slots"],
+                "stragglers": self.stats["stragglers"],
+                "retries": self.stats["retries"],
+                "routes": dict(self.stats["routes"]),
+                "flush_triggers": dict(self.stats["flush_triggers"]),
+                "lanes": lanes,
+                "open_buckets": len(self._open_buckets),
+                "in_flight": len(self._in_flight),
+                "straggler_events": list(self._straggler_log),
+                "admission_policy": self._admission.policy.name,
+            }
 
     # -- convenience single-request API ------------------------------------
     def matpow(self, a: jax.Array, power: int) -> jax.Array:

@@ -1,0 +1,143 @@
+"""Units for the perf-trajectory gate (benchmarks/compare.py).
+
+All on synthetic dicts and tmp_path JSON files — no benches run here.
+The gate's contract: regressions past the band fail, drift inside the
+band passes, missing keys/files degrade to reported skips (quick-config
+benches write a subset of the committed full run's keys), and zero
+baselines switch the tolerance to an absolute bound.
+"""
+
+import json
+
+import pytest
+
+from benchmarks.compare import SPECS, Metric, check_file, check_metric, main
+
+
+class TestMetricValidation:
+    def test_bad_direction_rejected(self):
+        with pytest.raises(ValueError, match="direction"):
+            Metric("x", "faster", 0.5)
+
+    def test_negative_tol_rejected(self):
+        with pytest.raises(ValueError, match="tol"):
+            Metric("x", "lower", -0.1)
+
+
+class TestCheckMetric:
+    def test_lower_is_better_band(self):
+        m = Metric("t_us", "lower", 0.5)
+        assert check_metric(m, {"t_us": 100.0}, {"t_us": 149.0})[0] == "ok"
+        assert check_metric(m, {"t_us": 100.0}, {"t_us": 40.0})[0] == "ok"
+        status, detail = check_metric(m, {"t_us": 100.0}, {"t_us": 151.0})
+        assert status == "regression"
+        assert "151" in detail and "100" in detail and "<=" in detail
+
+    def test_higher_is_better_band(self):
+        m = Metric("rps", "higher", 0.5)
+        assert check_metric(m, {"rps": 100.0}, {"rps": 51.0})[0] == "ok"
+        assert check_metric(m, {"rps": 100.0}, {"rps": 49.0})[0] == "regression"
+        assert check_metric(m, {"rps": 100.0}, {"rps": 900.0})[0] == "ok"
+
+    def test_equal_direction_exact_match(self):
+        m = Metric("bit_identical", "equal")
+        assert check_metric(m, {"bit_identical": True},
+                            {"bit_identical": True})[0] == "ok"
+        assert check_metric(m, {"bit_identical": True},
+                            {"bit_identical": False})[0] == "regression"
+
+    def test_zero_baseline_uses_absolute_tol(self):
+        # A 0.0 baseline can't anchor a ratio band: tol becomes the bound.
+        m = Metric("maxerr", "lower", 1e-3)
+        assert check_metric(m, {"maxerr": 0.0}, {"maxerr": 5e-4})[0] == "ok"
+        assert check_metric(m, {"maxerr": 0.0},
+                            {"maxerr": 2e-3})[0] == "regression"
+
+    def test_dotted_path_resolution(self):
+        m = Metric("overload.shed_rate", "lower", 0.6)
+        base = {"overload": {"shed_rate": 0.5}}
+        assert check_metric(m, base,
+                            {"overload": {"shed_rate": 0.79}})[0] == "ok"
+        assert check_metric(m, base,
+                            {"overload": {"shed_rate": 0.81}})[0] == \
+            "regression"
+
+    def test_missing_path_skips_either_side(self):
+        m = Metric("new_metric", "lower", 0.5)
+        status, detail = check_metric(m, {}, {"new_metric": 1.0})
+        assert status == "skip" and "baseline" in detail
+        status, detail = check_metric(m, {"new_metric": 1.0}, {})
+        assert status == "skip" and "fresh" in detail
+
+    def test_non_numeric_skips_not_crashes(self):
+        m = Metric("policy", "lower", 0.5)
+        assert check_metric(m, {"policy": "reject-newest"},
+                            {"policy": "reject-oldest"})[0] == "skip"
+
+
+class TestCheckFile:
+    def test_wildcard_expands_numeric_scalars_only(self):
+        base = {"a_us": 100.0, "b_us": 10.0, "note": "text", "flag": True}
+        fresh = {"a_us": 120.0, "b_us": 50.0, "note": "text", "flag": True}
+        regressions, oks, skips = check_file("BENCH_matpow.json", base, fresh)
+        # 0.6 band: a_us within, b_us 5x = regression; strings/bools skipped
+        # entirely (not even expanded).
+        assert len(regressions) == 1 and "b_us" in regressions[0]
+        assert len(oks) == 1 and "a_us" in oks[0]
+        assert not skips
+
+    def test_wildcard_tolerates_key_set_drift(self):
+        # quick config writes a subset; a renamed bench adds a new key.
+        base = {"old_only_us": 5.0, "shared_us": 5.0}
+        fresh = {"new_only_us": 5.0, "shared_us": 5.0}
+        regressions, oks, skips = check_file("BENCH_matpow.json", base, fresh)
+        assert not regressions
+        assert len(oks) == 1 and len(skips) == 2
+
+    def test_unknown_file_is_an_error(self):
+        with pytest.raises(ValueError, match="no metric spec"):
+            check_file("BENCH_mystery.json", {}, {})
+
+    def test_specs_cover_all_committed_bench_files(self):
+        assert set(SPECS) == {"BENCH_matpow.json", "BENCH_distributed.json",
+                              "BENCH_matfn.json"}
+
+
+class TestMainCLI:
+    def _write(self, path, doc):
+        path.write_text(json.dumps(doc))
+        return str(path)
+
+    def test_pass_and_fail_exit_codes(self, tmp_path):
+        basedir = tmp_path / "baseline"
+        basedir.mkdir()
+        self._write(basedir / "BENCH_matpow.json", {"t_us": 100.0})
+        fresh = self._write(tmp_path / "BENCH_matpow.json", {"t_us": 110.0})
+        assert main(["--baseline-dir", str(basedir), fresh]) == 0
+        fresh = self._write(tmp_path / "BENCH_matpow.json", {"t_us": 300.0})
+        assert main(["--baseline-dir", str(basedir), fresh]) == 1
+
+    def test_missing_baseline_file_is_skip(self, tmp_path, capsys):
+        fresh = self._write(tmp_path / "BENCH_matpow.json", {"t_us": 1.0})
+        assert main(["--baseline-dir", str(tmp_path / "nowhere"), fresh]) == 0
+        assert "first run?" in capsys.readouterr().out
+
+    def test_missing_fresh_file_is_error(self, tmp_path, capsys):
+        basedir = tmp_path / "baseline"
+        basedir.mkdir()
+        self._write(basedir / "BENCH_matpow.json", {"t_us": 1.0})
+        missing = str(tmp_path / "BENCH_matpow.json")
+        assert main(["--baseline-dir", str(basedir), missing]) == 1
+        assert "did its bench run?" in capsys.readouterr().out
+
+    def test_regression_report_names_metric(self, tmp_path, capsys):
+        basedir = tmp_path / "baseline"
+        basedir.mkdir()
+        self._write(basedir / "BENCH_matfn.json",
+                    {"batched_rps": 1000.0, "bit_identical": True})
+        fresh = self._write(tmp_path / "BENCH_matfn.json",
+                            {"batched_rps": 100.0, "bit_identical": False})
+        assert main(["--baseline-dir", str(basedir), fresh]) == 1
+        out = capsys.readouterr().out
+        assert "REGRESSION" in out
+        assert "batched_rps" in out and "bit_identical" in out

@@ -14,7 +14,11 @@ ALGEBRA over random ``n in [1, 97]`` and ``p in [0, 32]``:
     an f64 reference (naive's p-1 sequential multiplies vs binary's
     log2(p) squarings), for f32 and — tolerance-aware — bf16;
   * the fused-chain backend pads exactly ONCE per call at ANY size
-    (the single-pad invariant as a property, not a fixed-size check).
+    (the single-pad invariant as a property, not a fixed-size check);
+  * admission-control shedding never corrupts survivors: at ANY
+    (capacity, load, policy), every served answer is bit-identical to
+    its per-matrix jitted reference and serve/shed counts account for
+    every submit exactly.
 
 Operands are normalized to spectral norm 0.9 so powers up to 32 stay
 well-scaled (no overflow at n=1, no underflow-to-atol at n=97) and the
@@ -25,6 +29,7 @@ else the deterministic corner+seeded-examples fallback
 
 import numpy as np
 import pytest
+import jax
 import jax.numpy as jnp
 
 from _hypothesis_compat import given, settings, strategies as st
@@ -32,6 +37,9 @@ from _hypothesis_compat import given, settings, strategies as st
 from repro.core import (batched_matpow, matpow_binary, matpow_binary_traced,
                         matpow_naive)
 from repro.kernels import ops
+from repro.serve.admission import AdmissionControl, POLICIES, ShedError
+from repro.serve.matfn import MatFnEngine
+from repro.serve.scheduler import ManualClock
 
 CHAIN = "pallas_chain_interpret"
 
@@ -167,6 +175,68 @@ class TestStackedVsPerMatrix:
             np.testing.assert_array_equal(
                 got[i], np.asarray(matpow_binary(stack[i], p,
                                                  backend=CHAIN)))
+
+
+_POW_REFS = {}
+
+
+def _jit_pow(p):
+    """Memoized per-power jitted reference (the engine's bit-identity
+    contract is against per-matrix JITTED calls)."""
+    if p not in _POW_REFS:
+        _POW_REFS[p] = jax.jit(lambda x, pp=p: matpow_binary(x, pp))
+    return _POW_REFS[p]
+
+
+class TestShedNeverCorruptsSurvivors:
+    @settings(max_examples=MAX_EXAMPLES, deadline=None)
+    @given(st.integers(min_value=1, max_value=6),
+           st.integers(min_value=1, max_value=18),
+           st.integers(min_value=0, max_value=2))
+    def test_overflow_accounting_and_bit_identity(self, cap, total,
+                                                  policy_idx):
+        """At ANY (capacity, offered load, shed policy): the bounded lane
+        never exceeds its capacity, exactly min(total, capacity) requests
+        are served, serve + shed counts cover every submit, and every
+        SURVIVOR's answer is bit-identical to its per-matrix reference —
+        shedding is pure schedule, never math."""
+        policy_cls = POLICIES[("reject-newest", "reject-oldest",
+                               "deadline-aware")[policy_idx]]
+        rng = np.random.default_rng(cap * 1009 + total * 53 + policy_idx)
+        work = [(_mat(int(rng.choice((8, 16))), seed=cap * 10000 + i),
+                 int(rng.integers(0, 8))) for i in range(total)]
+        eng = MatFnEngine(
+            max_batch=64, clock=ManualClock(), max_delay_ms=10.0,
+            admission=AdmissionControl(capacity={"bulk": cap},
+                                       policy=policy_cls()))
+        eng.start()
+        outcomes, raised = [], 0
+        for a, p in work:
+            try:
+                outcomes.append((a, p, eng.submit("matpow", a, power=p)))
+            except ShedError:           # reject-newest / deadline-aware
+                raised += 1
+        snap = eng.stats()
+        # ManualClock: nothing flushed yet, so the live queue depth IS the
+        # admitted count — bounded by capacity no matter the interleaving
+        # of classes and evictions.
+        assert snap["lanes"]["bulk"]["queue_depth"] == min(total, cap)
+        assert snap["lanes"]["bulk"]["peak_depth"] <= cap
+        eng.close()                     # drains every admitted survivor
+        served = 0
+        for a, p, fut in outcomes:
+            exc = fut.exception()
+            if isinstance(exc, ShedError):   # revoked while queued
+                continue
+            assert exc is None
+            served += 1
+            np.testing.assert_array_equal(np.asarray(fut.result()),
+                                          np.asarray(_jit_pow(p)(a)))
+        assert served == min(total, cap)
+        assert snap["lanes"]["bulk"]["shed"] == total - served
+        assert raised + sum(
+            1 for _, _, f in outcomes
+            if isinstance(f.exception(), ShedError)) == total - served
 
 
 @pytest.mark.parametrize("impl", ["binary", "naive", "traced", "batched"])

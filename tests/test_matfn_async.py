@@ -9,11 +9,20 @@ Covers the async-serving acceptance criteria:
     happen on fill OR deadline, never before, with no sleep-based timing
     anywhere (real-time waits only as bounded backstops on events);
   * ``close()`` drains every pending bucket (no dropped futures),
-    ``drain=False`` cancels them loudly;
+    ``drain=False`` cancels them loudly — in-flight buckets included;
   * executor failures route into the affected bucket's futures as
     ``BucketExecutionError`` (bucket key in the message, original exception
     chained) and leave the scheduler serving other buckets — the
     poisoned-dtype regression;
+  * admission control: bounded per-lane queues with exact shed accounting
+    (ManualClock overflow units AND 6 racing producers), reject-newest vs
+    reject-oldest vs deadline-aware victim selection, the latency lane's
+    SLO cap and priority bypass, ``kick`` on an empty class as a no-op,
+    and the ``stats()`` snapshot schema;
+  * fault wiring: transient executor failures self-heal through bounded
+    retries (poisoned cached executables are evicted and re-resolved),
+    persistent ones exhaust into ``BucketExecutionError``, and straggling
+    flushes are counted + logged without evicting healthy executables;
   * dispatch memoization invalidates on autotune cache generation: a
     ``record_dispatch_thresholds`` / ``record_bucket_deadline`` mid-process
     reroutes the SAME engine (no restart);
@@ -29,6 +38,9 @@ import jax.numpy as jnp
 
 from repro.core import expm, matpow_binary
 from repro.kernels import autotune
+from repro.runtime.fault import StragglerEvent
+from repro.serve.admission import (AdmissionControl, DeadlineAware,
+                                   RejectNewest, RejectOldest, ShedError)
 from repro.serve.matfn import (BucketExecutionError, MatFnEngine,
                                MatFnFuture)
 from repro.serve.scheduler import (AdaptiveDeadline, BucketView,
@@ -630,3 +642,371 @@ class TestAdaptivePolicyIntegration:
             for f in futs:
                 f.result(timeout=TIMEOUT)
             assert eng.stats["flush_triggers"]["deadline"] >= 1
+
+
+class TestAdmissionControl:
+    """The daemon's front door: bounded lanes, shed policies, priority."""
+
+    def _eng(self, *, capacity, policy=None, bypass_n=64, clock=None,
+             max_batch=200, **kwargs):
+        eng = MatFnEngine(
+            max_batch=max_batch, clock=clock or ManualClock(),
+            max_delay_ms=10.0,
+            admission=AdmissionControl(
+                capacity=capacity,
+                policy=policy if policy is not None else RejectNewest(),
+                bypass_n=bypass_n),
+            **kwargs)
+        eng.start()
+        return eng
+
+    def test_reject_newest_sheds_incoming_synchronously(self):
+        eng = self._eng(capacity={"bulk": 3})
+        mats = [_mat(8, seed=i) for i in range(5)]
+        futs = [eng.submit("matpow", m, power=3) for m in mats[:3]]
+        for m in mats[3:]:
+            with pytest.raises(ShedError) as ei:
+                eng.submit("matpow", m, power=3)
+            # Typed, attributable: everything a client needs to react.
+            assert ei.value.lane == "bulk"
+            assert ei.value.queue_depth == 3
+            assert ei.value.capacity == 3
+            assert ei.value.policy == "reject-newest"
+            assert ei.value.key == ("matpow", 8, "float32", 3)
+        snap = eng.stats()
+        assert snap["lanes"]["bulk"]["submitted"] == 3
+        assert snap["lanes"]["bulk"]["shed"] == 2
+        assert snap["lanes"]["bulk"]["queue_depth"] == 3
+        # Admitted work is never revoked: all three survive the drain
+        # bit-identical.
+        eng.close()
+        for m, f in zip(mats[:3], futs):
+            np.testing.assert_array_equal(
+                np.asarray(f.result()), np.asarray(_ref("matpow", m, 3)))
+
+    def test_reject_oldest_revokes_admitted_future(self):
+        eng = self._eng(capacity={"bulk": 2}, policy=RejectOldest())
+        mats = [_mat(8, seed=i) for i in range(3)]
+        f0, f1, f2 = [eng.submit("matpow", m, power=3) for m in mats]
+        exc = f0.exception(timeout=TIMEOUT)   # oldest paid for the newest
+        assert isinstance(exc, ShedError)
+        assert exc.lane == "bulk" and exc.policy == "reject-oldest"
+        snap = eng.stats()
+        assert snap["lanes"]["bulk"]["shed"] == 1
+        assert snap["lanes"]["bulk"]["queue_depth"] == 2
+        eng.close()
+        for m, f in zip(mats[1:], (f1, f2)):
+            np.testing.assert_array_equal(
+                np.asarray(f.result()), np.asarray(_ref("matpow", m, 3)))
+
+    def test_deadline_aware_sheds_least_slack(self, tmp_cache):
+        """With per-class tuned deadlines the victim is whoever is closest
+        to a dead-on-arrival answer — NOT simply the oldest."""
+        autotune.record_bucket_deadline("matpow", 8, 100.0)
+        autotune.record_bucket_deadline("matpow", 16, 1.0)
+        ac = AdmissionControl(capacity={"bulk": 1}, policy=DeadlineAware())
+        # Incoming 1 ms class vs pending 100 ms class: the incoming
+        # request has the least slack and pays, despite being newest.
+        eng = MatFnEngine(clock=ManualClock(), admission=ac)
+        eng.start()
+        roomy = eng.submit("matpow", _mat(8), power=3)
+        with pytest.raises(ShedError):
+            eng.submit("matpow", _mat(16), power=3)
+        eng.settle(TIMEOUT)
+        assert not roomy.done()
+        eng.close()
+        assert roomy.exception() is None
+        # Pending 1 ms class vs incoming 100 ms class: the ADMITTED tight
+        # request is revoked and the roomy newcomer takes its slot.
+        eng = MatFnEngine(clock=ManualClock(), admission=ac)
+        eng.start()
+        tight = eng.submit("matpow", _mat(16), power=3)
+        admitted = eng.submit("matpow", _mat(8), power=3)
+        assert isinstance(tight.exception(timeout=TIMEOUT), ShedError)
+        eng.close()
+        assert admitted.exception() is None
+
+    @pytest.mark.parametrize("policy_cls", [RejectNewest, RejectOldest])
+    def test_exact_shed_accounting_under_producer_threads(self, policy_cls):
+        """6 racing producers against one bounded lane: admissions + sheds
+        account for every submit exactly, the queue never exceeds its
+        capacity, and every SURVIVOR's answer is bit-identical."""
+        n_threads, per_thread, cap = 6, 20, 10
+        eng = self._eng(capacity={"bulk": cap}, policy=policy_cls())
+        mats = [[_mat(8, seed=t * 100 + i) for i in range(per_thread)]
+                for t in range(n_threads)]
+        admitted = [[] for _ in range(n_threads)]
+        raised = [0] * n_threads
+        barrier = threading.Barrier(n_threads)
+
+        def producer(t):
+            barrier.wait(timeout=TIMEOUT)
+            for a in mats[t]:
+                try:
+                    admitted[t].append((a, eng.submit("matpow", a, power=3)))
+                except ShedError:
+                    raised[t] += 1
+
+        threads = [threading.Thread(target=producer, args=(t,))
+                   for t in range(n_threads)]
+        for th in threads:
+            th.start()
+        for th in threads:
+            th.join(timeout=TIMEOUT)
+            assert not th.is_alive()
+
+        total = n_threads * per_thread
+        snap = eng.stats()
+        # ManualClock: nothing flushed, so the lane sits exactly at its
+        # bound — and every request beyond it was shed, no matter how the
+        # producers interleaved.
+        assert snap["lanes"]["bulk"]["queue_depth"] == cap
+        assert snap["lanes"]["bulk"]["peak_depth"] == cap
+        assert snap["lanes"]["bulk"]["shed"] == total - cap
+        eng.close()
+        pairs = [p for fs in admitted for p in fs]
+        revoked = [f for _, f in pairs
+                   if isinstance(f.exception(), ShedError)]
+        served = [(a, f) for a, f in pairs
+                  if not isinstance(f.exception(), ShedError)]
+        assert sum(raised) + len(revoked) == total - cap
+        assert len(served) == cap
+        for a, f in served:
+            assert f.exception() is None
+            np.testing.assert_array_equal(
+                np.asarray(f.result()), np.asarray(_ref("matpow", a, 3)))
+
+    def test_priority_bypass_flushes_without_time_passing(self):
+        clock = ManualClock()
+        eng = self._eng(capacity={}, bypass_n=8, clock=clock)
+        a = _mat(8)
+        fut = eng.submit("matpow", a, power=3, priority="latency")
+        # n >= bypass_n: due the moment it arrives — no clock advance.
+        np.testing.assert_array_equal(
+            np.asarray(fut.result(timeout=TIMEOUT)),
+            np.asarray(_ref("matpow", a, 3)))
+        assert eng.stats["flush_triggers"]["priority"] == 1
+        # Below the threshold the latency lane still batches (until its
+        # SLO deadline, tested separately).
+        small = eng.submit("matpow", _mat(4), power=3, priority="latency")
+        eng.settle(TIMEOUT)
+        assert not small.done()
+        eng.close()
+
+    def test_latency_slo_caps_class_deadline(self):
+        """A latency-lane bucket flushes under the lane SLO (0.5 ms) while
+        the same traffic class on the bulk lane waits out the tuned 10 ms
+        — lanes do not share buckets, only executables."""
+        clock = ManualClock()
+        eng = self._eng(capacity={}, clock=clock)
+        lat = eng.submit("matpow", _mat(8, seed=0), power=3,
+                         priority="latency")
+        blk = eng.submit("matpow", _mat(8, seed=1), power=3)
+        clock.advance(0.001)              # past 0.5 ms SLO, before 10 ms
+        lat.result(timeout=TIMEOUT)
+        eng.settle(TIMEOUT)
+        assert not blk.done()
+        clock.advance(0.010)
+        blk.result(timeout=TIMEOUT)
+        eng.close()
+
+    def test_kick_empty_class_is_noop(self):
+        eng = self._eng(capacity={})
+        assert eng.kick() == 0
+        assert eng.kick(("matpow", 8, "float32", 3)) == 0
+        fut = eng.submit("matpow", _mat(8), power=3)
+        assert eng.kick(("matpow", 99, "float32", 3)) == 0   # wrong class
+        assert eng.stats["flush_triggers"]["kick"] == 0
+        assert eng.kick(fut.bucket_key) == 1
+        fut.result(timeout=TIMEOUT)
+        assert eng.stats["flush_triggers"]["kick"] == 1
+        eng.close()
+
+    def test_unknown_lane_rejected(self):
+        eng = MatFnEngine()
+        with pytest.raises(ValueError, match="unknown priority lane"):
+            eng.submit("matpow", _mat(8), power=3, priority="vip")
+        eng = self._eng(capacity={})
+        with pytest.raises(ValueError, match="unknown priority lane"):
+            eng.submit("matpow", _mat(8), power=3, priority="vip")
+        eng.close()
+
+    def test_stats_snapshot_schema(self):
+        eng = self._eng(capacity={"bulk": 4})
+        fut = eng.submit("matpow", _mat(8), power=3)
+        snap = eng.stats()
+        assert snap["admission_policy"] == "reject-newest"
+        assert snap["open_buckets"] == 1 and snap["in_flight"] == 0
+        for lane in ("latency", "bulk"):
+            row = snap["lanes"][lane]
+            for k in ("submitted", "shed", "retried", "flushed",
+                      "peak_depth", "queue_depth", "p50_ms", "p95_ms"):
+                assert k in row, f"missing {k} in {lane} row"
+        assert snap["lanes"]["bulk"]["p95_ms"] is None   # nothing resolved
+        # The legacy dict-indexing form keeps working alongside the call.
+        assert eng.stats["requests"] == 1
+        eng.kick()
+        fut.result(timeout=TIMEOUT)
+        snap = eng.stats()
+        assert snap["lanes"]["bulk"]["flushed"] == 1
+        assert snap["lanes"]["bulk"]["queue_depth"] == 0
+        assert snap["lanes"]["bulk"]["p95_ms"] is not None
+        assert snap["straggler_events"] == []
+        # A snapshot is a copy: mutating it must not corrupt the engine.
+        snap["lanes"]["bulk"]["flushed"] = 999
+        assert eng.stats()["lanes"]["bulk"]["flushed"] == 1
+        eng.close()
+
+    def test_close_drain_false_poisons_in_flight_futures(self):
+        """A wedged executor must not strand in-flight futures past
+        close(drain=False) — they are poisoned immediately, and the
+        executor finishing later loses the resolution race quietly."""
+        from concurrent.futures import CancelledError
+        eng = MatFnEngine(max_batch=2, clock=ManualClock(),
+                          max_delay_ms=10.0)
+        gate, entered = threading.Event(), threading.Event()
+        real = eng._run_chunk
+
+        def wedged_chunk(*args, **kwargs):
+            entered.set()
+            gate.wait(TIMEOUT)
+            return real(*args, **kwargs)
+
+        eng._run_chunk = wedged_chunk
+        eng.start()
+        in_flight = [eng.submit("matpow", _mat(8, seed=i), power=3)
+                     for i in range(2)]    # fills -> scheduler enters gate
+        assert entered.wait(TIMEOUT)       # bucket is now IN FLIGHT
+        for f in in_flight:
+            assert not f.done()
+        with pytest.raises(TimeoutError):
+            eng.close(drain=False, timeout=0.2)   # executor still wedged
+        for f in in_flight:                # ...but nothing hangs:
+            assert isinstance(f.exception(timeout=TIMEOUT), CancelledError)
+        gate.set()                         # late finish loses the race
+        eng.close()
+        assert eng._scheduler_crash is None
+
+
+class TestFaultWiring:
+    """Watchdog + bounded retry around bucket execution."""
+
+    def test_transient_failure_retries_to_success(self):
+        eng = MatFnEngine(max_batch=2, clock=ManualClock(),
+                          max_delay_ms=10.0, retries=1)
+        real = eng._run_chunk
+        fails = {"left": 1}
+
+        def flaky(*args, **kwargs):
+            if fails["left"]:
+                fails["left"] -= 1
+                raise RuntimeError("transient device loss")
+            return real(*args, **kwargs)
+
+        eng._run_chunk = flaky
+        eng.start()
+        mats = [_mat(8, seed=i) for i in range(2)]
+        futs = [eng.submit("matpow", m, power=3) for m in mats]
+        for m, f in zip(mats, futs):
+            np.testing.assert_array_equal(
+                np.asarray(f.result(timeout=TIMEOUT)),
+                np.asarray(_ref("matpow", m, 3)))
+        snap = eng.stats()
+        assert snap["retries"] == 1
+        assert snap["lanes"]["bulk"]["retried"] == 2
+        eng.close()
+
+    def test_retry_evicts_poisoned_cached_executable(self):
+        """The self-heal path: a poisoned compile-cache entry costs one
+        recompile, not the traffic class forever."""
+        eng = MatFnEngine(max_batch=2, clock=ManualClock(),
+                          max_delay_ms=10.0, retries=1)
+        eng.start()
+        warm = [eng.submit("matpow", _mat(8, seed=i), power=3)
+                for i in range(2)]         # fills -> compiles + caches
+        for f in warm:
+            assert f.exception(timeout=TIMEOUT) is None
+        eng.settle(TIMEOUT)
+
+        def boom(*args, **kwargs):
+            raise RuntimeError("poisoned cached executable")
+
+        with eng._cv:
+            poisoned = [k for k in eng._executables if k[3] == 8]
+            assert poisoned                # the class we just warmed
+            for k in poisoned:
+                eng._executables[k] = boom
+        compiles0 = eng.stats["compiles"]
+        mats = [_mat(8, seed=10 + i) for i in range(2)]
+        futs = [eng.submit("matpow", m, power=3) for m in mats]
+        for m, f in zip(mats, futs):       # healed: correct answers
+            np.testing.assert_array_equal(
+                np.asarray(f.result(timeout=TIMEOUT)),
+                np.asarray(_ref("matpow", m, 3)))
+        snap = eng.stats()
+        assert snap["retries"] == 1
+        assert snap["compiles"] > compiles0   # eviction forced a recompile
+        eng.close()
+
+    def test_persistent_failure_exhausts_bounded_retries(self):
+        eng = MatFnEngine(max_batch=2, clock=ManualClock(),
+                          max_delay_ms=10.0, retries=2)
+        real = eng._run_chunk
+        calls = {"n": 0}
+
+        def broken(*args, **kwargs):
+            calls["n"] += 1
+            raise RuntimeError("device gone")
+
+        eng._run_chunk = broken
+        eng.start()
+        futs = [eng.submit("matpow", _mat(8, seed=i), power=3)
+                for i in range(2)]
+        for f in futs:
+            exc = f.exception(timeout=TIMEOUT)
+            assert isinstance(exc, BucketExecutionError)
+            assert isinstance(exc.__cause__, RuntimeError)
+        assert calls["n"] == 3             # initial + 2 bounded retries
+        snap = eng.stats()
+        assert snap["retries"] == 2
+        assert snap["lanes"]["bulk"]["retried"] == 4   # 2 retries x 2 futs
+        # The scheduler survived; a healed executor serves fresh traffic.
+        eng._run_chunk = real
+        ok = eng.submit("matpow", _mat(8, seed=9), power=3)
+        eng.kick()
+        assert ok.exception(timeout=TIMEOUT) is None
+        eng.close()
+
+    def test_straggler_counted_and_logged_without_eviction(self):
+        """Stragglers are observability, not a kill switch: the counter
+        and log move, the executable cache does NOT (eviction-on-straggle
+        recompiles healthy executables and feeds the tail it watches)."""
+
+        class TripEveryTime:
+            def observe(self, step, duration_s):
+                return StragglerEvent(step, duration_s, 0.0)
+
+        eng = MatFnEngine(max_batch=2, clock=ManualClock(),
+                          max_delay_ms=10.0, watchdog=TripEveryTime())
+        eng.start()
+        first = [eng.submit("matpow", _mat(8, seed=i), power=3)
+                 for i in range(2)]
+        for f in first:
+            assert f.exception(timeout=TIMEOUT) is None
+        snap = eng.stats()
+        assert snap["stragglers"] >= 1
+        assert snap["straggler_events"]
+        assert "bucket ('matpow', 8," in snap["straggler_events"][-1]
+        hits0 = eng.stats["cache_hits"]
+        again = [eng.submit("matpow", _mat(8, seed=10 + i), power=3)
+                 for i in range(2)]
+        for f in again:
+            assert f.exception(timeout=TIMEOUT) is None
+        assert eng.stats["cache_hits"] > hits0   # cache survived the trip
+        eng.close()
+
+    def test_fault_config_rejections(self):
+        with pytest.raises(ValueError):
+            MatFnEngine(retries=-1)
+        with pytest.raises(ValueError):
+            MatFnEngine(retry_backoff_s=-0.1)
