@@ -106,6 +106,20 @@ SPECS = {
         # slower relative to offered load — the overload trace's own
         # drift signal (its absolute bounds live in ci.yml).
         Metric("overload.shed_rate", "lower", 0.6),
+        # Execution-stream overlap (multi-tenant trace). The absolute
+        # floor (>= 2 concurrently-busy streams) lives in ci.yml; the
+        # trajectory band catches the overlap machinery quietly
+        # degrading (peak 2 -> fresh must stay >= 2 since counts are
+        # integers; chain executions collapsing to near-zero means the
+        # cold tenant's route stopped running concurrently).
+        Metric("overload.overlap.peak_concurrent_streams", "higher", 0.4),
+        Metric("overload.overlap.xla_stream_executed", "higher", 0.75),
+        Metric("overload.overlap.chain_stream_executed", "higher", 0.75),
+        # Tenant fairness drift: the cold tenant's tail creeping up
+        # relative to the hot tenants', or its served count collapsing,
+        # is the starvation regression this trace exists to catch.
+        Metric("overload.cold_p95_over_hot_p95", "lower", 1.5),
+        Metric("overload.tenants.cold.served", "higher", 0.8),
     ],
 }
 

@@ -32,15 +32,21 @@ daemon answers stay bit-identical to one synchronous ``flush()`` of the
 same workload.
 
 ``--open-loop`` also runs the OVERLOAD trace (``json['overload']``): a
-bursty mixed-lane workload (25% latency-lane) offered by several
-concurrent producer threads against a daemon with bounded per-lane
-queues — the admission-control acceptance run. CI asserts the applied
-overload was real (``load_vs_drain`` — offered rate over drained rate —
->= 2x), the shed rate is nonzero but bounded, every SERVED answer stays
-bit-identical to its per-matrix reference (shedding never corrupts
-survivors), per-lane peak queue depth never exceeds the configured
-capacity, and the latency lane's engine-side p95 is <= 0.5x the bulk
-lane's.
+MULTI-TENANT bursty workload — two hot tenants flooding the xla route
+with a mixed-lane burst trace (25% latency-lane) plus one cold tenant
+trickling chain-route (n=96) bulk requests — offered by concurrent
+producer threads against a daemon with bounded per-lane queues. This is
+both the admission-control acceptance run and the execution-stream
+overlap run. CI asserts the applied overload was real
+(``load_vs_drain`` — offered rate over drained rate — >= 2x), the shed
+rate is nonzero but bounded, every SERVED answer stays bit-identical to
+its per-matrix reference (shedding never corrupts survivors), per-lane
+peak queue depth never exceeds the configured capacity, the latency
+lane's engine-side p95 is <= 0.5x the bulk lane's, the xla and chain
+execution streams were observed concurrently busy
+(``overlap.peak_concurrent_streams >= 2``), and the cold tenant is not
+starved (its served p95 stays within a small factor of the hot
+tenants').
 """
 
 from __future__ import annotations
@@ -303,40 +309,66 @@ def bench_open_loop(*, quick=False, seed=0):
     }
 
 
-def bench_overload_shedding(*, quick=False, seed=0, producers=3):
-    """Admission control under a bursty mixed-lane overload trace.
+def bench_overload_shedding(*, quick=False, seed=0, hot_tenants=2):
+    """Admission control + stream overlap under a multi-tenant overload
+    trace: 2 HOT bursty tenants and 1 COLD trickle tenant.
 
-    ``producers`` open-loop generator threads shard the trace and submit
-    concurrently (one Python thread tops out near the daemon's own drain
-    rate — several are needed to actually overload it, and concurrent
-    clients are the realistic front-door model anyway; the admission
-    suite separately proves shed counts stay exact under 6 producers).
-    Bursts of 64 back-to-back submits, 25% on the latency lane, against
-    bounded lanes (bulk=48, latency=8, reject-newest).
+    Each tenant is one open-loop generator thread (concurrent clients
+    are the realistic front-door model, and one Python thread tops out
+    near the daemon's own drain rate — several are needed to actually
+    overload it; the admission suite separately proves shed counts stay
+    exact under 6 producers):
+
+      * **hot-0 / hot-1** shard a bursty mixed-lane trace round-robin
+        (bursts of 64 back-to-back submits, 25% latency lane, sizes
+        16 and 32 — the ``xla`` route) at a combined 8x the serial
+        capacity: the overload.
+      * **cold** trickles uniformly-spaced ``n=96`` bulk requests — the
+        ``chain`` route, i.e. a DIFFERENT execution stream — at under a
+        tenth of the hot offered rate, across the same window.
+
+    The multi-tenant shape is what exercises the per-route execution
+    streams end to end: cold chain buckets execute on the chain stream
+    WHILE the xla stream drains the hot backlog (``overlap`` records the
+    pool's peak concurrently-busy streams — CI gates >= 2 — and the
+    per-stream executed counts), and an in-flight chain bucket never
+    blocks a due hot flush. Fairness is per-TENANT accounting on top of
+    per-LANE capacity: tenants share the bulk lane's bound, so the cold
+    tenant pays the same admission odds as hot bulk traffic, but its
+    SERVED requests keep a bounded p95 (deadline + chain service, not
+    the hot backlog) — ``cold_p95_over_hot_p95`` is the starvation
+    metric CI holds.
 
     The parameters are chosen to make the gated outcomes STRUCTURAL, not
     machine-speed luck:
 
-      * ``max_batch=64`` with bulk capacity 48 means bulk buckets never
-        fill — they flush on the 20 ms class deadline, so the bulk lane
-        admits at most ~capacity per deadline window and sheds the rest
-        of each burst; offered load beyond that turns into shed rate,
-        not queue depth (``load_vs_drain = offered / drain >= 2`` is
-        the overload gate, and ``1 / (1 - shed_rate)`` is the same
-        quantity).
+      * ``max_batch=64`` with bulk capacity 32 means bulk buckets never
+        fill — they flush on the 40 ms class deadline, so the bulk lane
+        drains at most ~capacity per deadline window (~800 req/s) and
+        sheds the rest of each burst; offered load beyond that turns
+        into shed rate, not queue depth (``load_vs_drain = offered /
+        drain >= 2`` is the overload gate, and ``1 / (1 - shed_rate)``
+        is the same quantity). The bound matters MORE with execution
+        streams than it did in PR 6: direct priority bypass means the
+        latency lane barely sheds at all now, so the capped bulk lane
+        has to carry the whole overload signal — the cap is sized so
+        bulk drain plus the (uncapped) latency drain stays under half
+        the slowest credible generator's offered rate.
       * The latency lane flushes under its 0.5 ms SLO cap (and half its
-        traffic, n=32 >= bypass_n, skips assembly entirely), is executed
-        before bulk in every scheduler poll, and preempts the remaining
-        bulk backlog between bucket executions. Its engine-side wait is
-        bounded by one in-progress bulk execution, while an admitted
-        bulk request waits out the 20 ms deadline plus backlog — the
-        wide deadline split is what keeps the p95 ratio gate (<= 0.5)
-        safe from scheduler-timing noise.
+        traffic, n=32 >= bypass_n, skips assembly entirely — handed
+        straight to the xla stream at submit), is executed before bulk
+        in every scheduler poll, and preempts the remaining bulk backlog
+        between bucket executions. Its engine-side wait is bounded by
+        one in-progress bulk execution, while an admitted bulk request
+        waits out the 40 ms deadline plus backlog — the wide deadline
+        split is what keeps the p95 ratio gate (<= 0.5) safe from
+        scheduler-timing noise.
       * Capacity enforcement at submit makes peak depth <= capacity an
         invariant; the bench records it so CI can hold the line.
 
-    ``bit_identical`` compares every SERVED answer against a warm
-    per-matrix jitted reference: shedding must never corrupt survivors.
+    ``bit_identical`` compares every SERVED answer — hot and cold —
+    against a warm per-matrix jitted reference: shedding and stream
+    concurrency must never corrupt survivors.
     """
     from repro.core import matpow_binary
     from repro.kernels import autotune
@@ -345,38 +377,65 @@ def bench_overload_shedding(*, quick=False, seed=0, producers=3):
     from repro.serve.matfn import MatFnEngine
 
     n_requests = 1536 if quick else 3072
-    sizes, power = (16, 32), 7
+    n_cold = n_requests // 8
+    n_hot = n_requests - n_cold
+    hot_sizes, cold_size, power = (16, 32), 96, 7
     burst, priority_frac = 64, 0.25
-    max_batch, max_delay_ms = 64, 20.0
-    capacity = {"bulk": 48, "latency": 8}
+    max_batch, max_delay_ms = 64, 40.0
+    capacity = {"bulk": 32, "latency": 8}
     slo_ms = {"latency": 0.5, "bulk": None}
     bypass_n = 32
 
     rng = np.random.default_rng(seed + 7)
-    workload = []
-    for _ in range(n_requests):
-        n = int(rng.choice(sizes))
-        a = jnp.asarray(rng.standard_normal((n, n)) * 0.4 / np.sqrt(n),
-                        jnp.float32)
-        workload.append(("matpow", a, power))
-    lanes = ["latency" if rng.random() < priority_frac else "bulk"
-             for _ in range(n_requests)]
+
+    def _mat(n):
+        return jnp.asarray(rng.standard_normal((n, n)) * 0.4 / np.sqrt(n),
+                           jnp.float32)
+
+    hot_workload = [("matpow", _mat(int(rng.choice(hot_sizes))), power)
+                    for _ in range(n_hot)]
+    hot_lanes = ["latency" if rng.random() < priority_frac else "bulk"
+                 for _ in range(n_hot)]
+    cold_workload = [("matpow", _mat(cold_size), power)
+                     for _ in range(n_cold)]
 
     # Warm per-matrix references double as the serial-capacity estimate
-    # and the bit-identity oracle for every served request.
+    # and the bit-identity oracle for every served request (cold n=96
+    # included — on CPU the chain route degrades to the same XLA dot, so
+    # survivors stay bit-identical across routes).
     ref_fn = jax.jit(lambda x: matpow_binary(x, power))
-    refs, service = [], []
-    for _op, a, _p in workload:
-        jax.block_until_ready(ref_fn(a))   # warm per shape (2 compiles)
-        t0 = time.perf_counter()
-        refs.append(np.asarray(jax.block_until_ready(ref_fn(a))))
-        service.append(time.perf_counter() - t0)
+    service = []
+
+    def _refs(workload):
+        out = []
+        for _op, a, _p in workload:
+            jax.block_until_ready(ref_fn(a))  # warm per shape (2 compiles)
+            t0 = time.perf_counter()
+            out.append(np.asarray(jax.block_until_ready(ref_fn(a))))
+            service.append(time.perf_counter() - t0)
+        return out
+
+    hot_refs, cold_refs = _refs(hot_workload), _refs(cold_workload)
     serial_capacity = 1.0 / float(np.mean(service))
 
     rate = 8.0 * serial_capacity
-    # Bursty arrivals: bursts of ``burst`` back-to-back submits, burst
-    # starts spaced to hold the 8x mean rate.
-    arrivals = [(i // burst) * (burst / rate) for i in range(n_requests)]
+    # Hot arrivals: bursts of ``burst`` back-to-back submits, burst
+    # starts spaced to hold the 8x mean rate. Cold arrivals: a uniform
+    # trickle across the same submission window (phase-shifted off the
+    # burst starts), well under the chain stream's capacity so a served
+    # cold request's latency is deadline + chain service, never a queue
+    # that grows with the run.
+    hot_arrivals = [(i // burst) * (burst / rate) for i in range(n_hot)]
+    # The hot target rate is deliberately unachievable (the generator
+    # threads are the bottleneck — that is what makes the trace an
+    # overload), so the REAL submission window is generator-bound:
+    # empirically ~4x the serial-capacity replay time on 1-2 core
+    # hosts. Spread the cold trickle over that estimate so it genuinely
+    # spans the hot window (one chain bucket per few deadline windows)
+    # instead of front-loading into the first few milliseconds.
+    window = 4.0 * n_requests / serial_capacity
+    cold_arrivals = [(j + 0.5) * window / n_cold for j in range(n_cold)]
+    cold_rate = n_cold / window
 
     eng = MatFnEngine(
         max_batch=max_batch, max_delay_ms=max_delay_ms,
@@ -384,7 +443,7 @@ def bench_overload_shedding(*, quick=False, seed=0, producers=3):
         admission=AdmissionControl(capacity=capacity, policy=RejectNewest(),
                                    slo_ms=slo_ms, bypass_n=bypass_n))
     eng.start()
-    for n in sizes:
+    for n in (*hot_sizes, cold_size):
         eng.warm("matpow", n, power=power)
     # Default 5 ms GIL switch interval convoys the scheduler behind the
     # full-tilt generator thread (each boundary crossing inside a flush
@@ -403,27 +462,38 @@ def bench_overload_shedding(*, quick=False, seed=0, producers=3):
     gc.collect()
     gc.freeze()
     gc.disable()
-    # Round-robin sharding keeps every producer's arrival schedule
-    # monotone and keeps the bursts aligned across producers, so the
-    # combined trace still lands ``burst`` requests per burst window.
-    shards = [list(range(p, n_requests, producers))
-              for p in range(producers)]
-    outs = [None] * producers
+    # Round-robin sharding keeps every hot tenant's arrival schedule
+    # monotone and keeps the bursts aligned across tenants, so the
+    # combined hot trace still lands ``burst`` requests per burst
+    # window. The cold tenant submits its whole trickle itself.
+    shards = [list(range(p, n_hot, hot_tenants)) for p in range(hot_tenants)]
+    tenant_names = [f"hot-{p}" for p in range(hot_tenants)] + ["cold"]
+    outs = {}
     errors = []
 
-    def producer(p, idx):
+    def hot_producer(p, idx):
         try:
-            outs[p] = run_open_loop(
-                eng, [workload[i] for i in idx], rate / producers,
-                lanes=[lanes[i] for i in idx],
-                arrivals=[arrivals[i] for i in idx])
+            outs[f"hot-{p}"] = run_open_loop(
+                eng, [hot_workload[i] for i in idx], rate / hot_tenants,
+                lanes=[hot_lanes[i] for i in idx],
+                arrivals=[hot_arrivals[i] for i in idx])
         except BaseException as exc:      # surface on the caller thread
             errors.append(exc)
 
+    def cold_producer():
+        try:
+            outs["cold"] = run_open_loop(
+                eng, cold_workload, cold_rate,
+                lanes=["bulk"] * n_cold, arrivals=cold_arrivals)
+        except BaseException as exc:
+            errors.append(exc)
+
     try:
-        threads = [threading.Thread(target=producer, args=(p, shard),
-                                    name=f"overload-producer-{p}")
+        threads = [threading.Thread(target=hot_producer, args=(p, shard),
+                                    name=f"overload-hot-{p}")
                    for p, shard in enumerate(shards)]
+        threads.append(threading.Thread(target=cold_producer,
+                                        name="overload-cold"))
         for t in threads:
             t.start()
         for t in threads:
@@ -437,23 +507,68 @@ def bench_overload_shedding(*, quick=False, seed=0, producers=3):
     snap = eng.stats()
     eng.close()
 
-    results = [None] * n_requests
-    for shard, (res, _lats, _wall, _inf) in zip(shards, outs):
+    hot_results = [None] * n_hot
+    for shard, name in zip(shards, tenant_names):
         for j, i in enumerate(shard):
-            results[i] = res[j]
-    shed = sum(o[3]["shed"] for o in outs)
+            hot_results[i] = outs[name][0][j]
+    shed = sum(outs[name][3]["shed"] for name in tenant_names)
     served = n_requests - shed
     # Offered rate over the SUBMISSION window (the drain tail after the
     # last submit is server latency, not generator pace). The drain rate
     # is what the daemon actually cleared over that same window, so
     # offered/drain == n_requests/served == 1/(1 - shed_rate): the
     # overload factor the admission layer absorbed.
-    submit_wall = max(o[3]["submit_wall_s"] for o in outs)
+    submit_wall = max(outs[name][3]["submit_wall_s"]
+                      for name in tenant_names)
     achieved_rps = n_requests / submit_wall
     drain_rps = served / submit_wall
     bit_identical = all(
         np.array_equal(np.asarray(r), ref)
-        for r, ref in zip(results, refs) if not isinstance(r, Exception))
+        for r, ref in zip(hot_results + list(outs["cold"][0]),
+                          hot_refs + cold_refs)
+        if not isinstance(r, Exception))
+
+    # -- per-tenant fairness rows (client-observed latency) ---------------
+    def tenant_row(n, lats, info):
+        ok = [l for l in lats if l is not None]
+        return {
+            "offered": n,
+            "shed": info["shed"],
+            "served": n - info["shed"],
+            "shed_rate": round(info["shed"] / n, 4),
+            "p50_ms": round(_percentile(ok, 50) * 1e3, 3) if ok else None,
+            "p95_ms": round(_percentile(ok, 95) * 1e3, 3) if ok else None,
+        }
+
+    tenants = {}
+    for name, shard in zip(tenant_names, shards):
+        tenants[name] = tenant_row(len(shard), outs[name][1],
+                                   outs[name][3])
+    tenants["cold"] = tenant_row(n_cold, outs["cold"][1], outs["cold"][3])
+    hot_lats = [l for p in range(hot_tenants)
+                for l in outs[f"hot-{p}"][1] if l is not None]
+    cold_lats = [l for l in outs["cold"][1] if l is not None]
+    hot_p95 = _percentile(hot_lats, 95) * 1e3 if hot_lats else None
+    cold_p95 = _percentile(cold_lats, 95) * 1e3 if cold_lats else None
+    cold_over_hot = (None if not hot_p95 or not cold_p95
+                     else round(cold_p95 / hot_p95, 3))
+
+    # -- stream overlap (did two routes actually execute concurrently?) ---
+    stream_rows = snap["streams"]
+
+    def _stream_executed(route):
+        return sum(r["executed"] for r in stream_rows
+                   if route in r["routes"])
+
+    overlap = {
+        # High-water mark of concurrently-BUSY streams (warm jobs do not
+        # count — only dispatched buckets): >= 2 means a chain bucket
+        # and an xla bucket were provably in execution at the same time.
+        "peak_concurrent_streams": snap["peak_concurrent_streams"],
+        "xla_stream_executed": _stream_executed("xla"),
+        "chain_stream_executed": _stream_executed("chain"),
+        "streams": {r["label"]: r["executed"] for r in stream_rows},
+    }
     lane_rows = {}
     for lane, row in snap["lanes"].items():
         arrived = row["submitted"] + row["shed"]
@@ -471,6 +586,8 @@ def bench_overload_shedding(*, quick=False, seed=0, producers=3):
     bulk_p95 = lane_rows["bulk"]["p95_ms"]
     return {
         "n_requests": n_requests,
+        "n_hot": n_hot,
+        "n_cold": n_cold,
         "burst": burst,
         "priority_frac": priority_frac,
         "max_batch": max_batch,
@@ -479,7 +596,10 @@ def bench_overload_shedding(*, quick=False, seed=0, producers=3):
         "slo_ms": slo_ms,
         "bypass_n": bypass_n,
         "policy": snap["admission_policy"],
-        "producers": producers,
+        "producers": hot_tenants + 1,
+        "tenants": tenants,
+        "cold_p95_over_hot_p95": cold_over_hot,
+        "overlap": overlap,
         "serial_capacity_rps": round(serial_capacity, 1),
         "offered_rps_target": round(rate, 1),
         "offered_rps_achieved": round(achieved_rps, 1),
@@ -595,7 +715,7 @@ def main(argv=None):
                   f"triggers={r['flush_triggers']}")
         ov = out["overload"]
         print(f"[matfn_bench] overload: {ov['n_requests']} requests from "
-              f"{ov['producers']} producers at {ov['load_vs_drain']}x drain "
+              f"{ov['producers']} tenants at {ov['load_vs_drain']}x drain "
               f"rate (offered {ov['offered_rps_achieved']} req/s, drained "
               f"{ov['drain_rps_achieved']} req/s) — policy={ov['policy']} "
               f"capacity={ov['capacity']}")
@@ -609,6 +729,17 @@ def main(argv=None):
                   f"(rate={row['shed_rate']}) "
                   f"peak_depth={row['peak_depth']}/{row['capacity']} "
                   f"p95={row['p95_ms']} ms")
+        for name, row in ov["tenants"].items():
+            print(f"[matfn_bench]   tenant {name:6s} "
+                  f"offered={row['offered']} shed={row['shed']} "
+                  f"served={row['served']} p50={row['p50_ms']} ms "
+                  f"p95={row['p95_ms']} ms")
+        ovl = ov["overlap"]
+        print(f"[matfn_bench]   overlap: peak_concurrent_streams="
+              f"{ovl['peak_concurrent_streams']} "
+              f"xla_executed={ovl['xla_stream_executed']} "
+              f"chain_executed={ovl['chain_stream_executed']} "
+              f"cold/hot p95={ov['cold_p95_over_hot_p95']}")
     print(f"# wrote {args.json}", file=sys.stderr)
     return 0
 

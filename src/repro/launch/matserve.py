@@ -261,6 +261,14 @@ def _daemon_main(args, workload):
               f"shed={row['shed']} flushed={row['flushed']} "
               f"retried={row['retried']} peak_depth={row['peak_depth']} "
               f"p95={p95}")
+    for row in snap["streams"]:
+        crashed = "" if row["crashed"] is None \
+            else f" CRASHED: {row['crashed']}"
+        print(f"[matserve]   {row['label']:24s} executed={row['executed']} "
+              f"queued={row['queued']} in_flight={row['in_flight']}"
+              f"{crashed}")
+    print(f"[matserve]   peak concurrent streams="
+          f"{snap['peak_concurrent_streams']}")
     if args.verify:
         _verify(workload, results)
     return 0

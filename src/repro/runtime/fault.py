@@ -25,6 +25,7 @@ from __future__ import annotations
 import collections
 import dataclasses
 import statistics
+import threading
 import time
 from typing import Callable, List, Optional
 
@@ -44,13 +45,26 @@ class StragglerEvent:
 
 class Watchdog:
     """Rolling-median step timer. ``observe`` returns a StragglerEvent when
-    a step exceeds timeout_factor x median over the last ``window`` steps."""
+    a step exceeds timeout_factor x median over the last ``window`` steps.
+
+    Thread-safe: the matfn daemon's per-route execution streams observe
+    CONCURRENTLY into one shared watchdog (one rolling median over all
+    routes — a straggler is a straggler whichever stream ran it), so the
+    window mutation and the median read run under a lock. Without it the
+    append/pop(0) pair races against the ``statistics.median`` scan —
+    interleaved observers can read a mid-mutation window (wrong median)
+    or overshoot the window bound. The lock covers one median over <=
+    ``window`` floats; retry BACKOFF, by contrast, sleeps on the failing
+    stream's own worker thread (see :func:`retry_step`), so a retrying
+    chain bucket never head-of-line stalls the xla stream's observations.
+    """
 
     def __init__(self, *, timeout_factor: float = 3.0, window: int = 32,
                  min_samples: int = 5, max_events: int = 1024):
         self.timeout_factor = timeout_factor
         self.window = window
         self.min_samples = min_samples
+        self._lock = threading.Lock()
         self._durations: List[float] = []
         # Ring buffer, not a list: a long-lived observer (the matfn daemon
         # watches every bucket flush) must not grow event history without
@@ -59,14 +73,15 @@ class Watchdog:
 
     def observe(self, step: int, duration_s: float) -> Optional[StragglerEvent]:
         ev = None
-        if len(self._durations) >= self.min_samples:
-            med = statistics.median(self._durations)
-            if duration_s > self.timeout_factor * med:
-                ev = StragglerEvent(step, duration_s, med)
-                self.events.append(ev)
-        self._durations.append(duration_s)
-        if len(self._durations) > self.window:
-            self._durations.pop(0)
+        with self._lock:
+            if len(self._durations) >= self.min_samples:
+                med = statistics.median(self._durations)
+                if duration_s > self.timeout_factor * med:
+                    ev = StragglerEvent(step, duration_s, med)
+                    self.events.append(ev)
+            self._durations.append(duration_s)
+            if len(self._durations) > self.window:
+                self._durations.pop(0)
         return ev
 
 

@@ -9,6 +9,10 @@
 ``admission`` — the daemon's front door: bounded per-lane queues, shed
                 policies (reject-newest / reject-oldest / deadline-aware),
                 priority-lane SLO targets, and the typed ``ShedError``.
+``streams``   — the daemon's per-route execution streams: route-keyed
+                executor workers (``ExecutionStreams`` config +
+                ``StreamPool``) so concurrent buckets overlap across
+                dispatch routes instead of serializing on the scheduler.
 """
 
 from repro.serve.admission import (LANES, POLICIES, AdmissionControl,
@@ -18,6 +22,7 @@ from repro.serve.matfn import (BucketExecutionError, MatFnEngine,
                                MatFnFuture, MatFnRequest, bucket_batch)
 from repro.serve.scheduler import (AdaptiveDeadline, FillOrDeadline,
                                    FlushPolicy, ManualClock, SystemClock)
+from repro.serve.streams import ExecutionStreams, StreamCrashed, StreamPool
 
 __all__ = [
     "MatFnEngine", "MatFnRequest", "MatFnFuture", "BucketExecutionError",
@@ -26,4 +31,5 @@ __all__ = [
     "SystemClock", "ManualClock",
     "LANES", "POLICIES", "AdmissionControl", "AdmissionPolicy",
     "RejectNewest", "RejectOldest", "DeadlineAware", "ShedError",
+    "ExecutionStreams", "StreamPool", "StreamCrashed",
 ]

@@ -202,6 +202,14 @@ class AdmissionControl:
     ``bypass_n``  latency-lane requests at n >= this skip bucket
                   assembly and flush immediately (``"priority"``
                   trigger).
+    ``bypass_direct``  when True (default) a priority-bypass bucket is
+                  handed straight to its route's execution stream at
+                  submit — it never waits for a scheduler poll, and a
+                  scheduler busy dispatching bulk backlog cannot delay
+                  it. False restores the PR 6 path (the bucket is only
+                  MARKED due; the next scheduler poll dispatches it) for
+                  deployments that want every dispatch decision on the
+                  scheduler thread.
     """
 
     capacity: Mapping[str, Optional[int]] = dataclasses.field(
@@ -210,6 +218,7 @@ class AdmissionControl:
     slo_ms: Mapping[str, Optional[float]] = dataclasses.field(
         default_factory=lambda: dict(DEFAULT_SLO_MS))
     bypass_n: int = DEFAULT_BYPASS_N
+    bypass_direct: bool = True
 
     def __post_init__(self):
         for mapping, what in ((self.capacity, "capacity"),
@@ -230,6 +239,9 @@ class AdmissionControl:
         if not isinstance(self.bypass_n, int) or self.bypass_n < 1:
             raise ValueError(f"bypass_n must be a positive int, "
                              f"got {self.bypass_n!r}")
+        if not isinstance(self.bypass_direct, bool):
+            raise TypeError(f"bypass_direct must be a bool, "
+                            f"got {self.bypass_direct!r}")
         if not isinstance(self.policy, AdmissionPolicy):
             raise TypeError(f"policy must be an AdmissionPolicy, "
                             f"got {type(self.policy).__name__}")

@@ -36,6 +36,17 @@ that pipeline as a service layer over the reproduction's chain executors:
     (never lost on a daemon thread), and :meth:`MatFnEngine.close` drains
     every pending bucket before the thread exits.
 
+  * **Execution streams** (:mod:`repro.serve.streams`): the daemon's
+    scheduler thread keeps admission, bucketing, deadlines, and lane
+    priority to itself, but hands each due bucket to its dispatch route's
+    execution stream — a route-keyed worker pool (one stream each for
+    ``xla`` / ``chain`` / ``sharded`` by default; configurable via
+    :class:`~repro.serve.streams.ExecutionStreams`) — so an in-flight
+    chain bucket no longer blocks a due xla or priority-lane flush.
+    Streams change the SCHEDULE, never the math (``streams=1`` collapses
+    back to the single serialized queue), latency-lane buckets jump their
+    stream's queue, and a crashed stream poisons only its own buckets
+    while the others keep serving.
   * **Admission control** (:mod:`repro.serve.admission`): every request
     rides a LANE (``"bulk"`` default, ``submit(..., priority="latency")``
     for latency-critical traffic); each lane has a bounded queue whose
@@ -94,10 +105,11 @@ from repro.serve.admission import (LANES, AdmissionControl, PendingView,
                                    ShedError)
 from repro.serve.scheduler import (BucketView, FillOrDeadline, FlushPolicy,
                                    SystemClock)
+from repro.serve.streams import ExecutionStreams, StreamCrashed, StreamPool
 
 __all__ = ["MatFnRequest", "MatFnEngine", "MatFnFuture",
            "BucketExecutionError", "ShedError", "bucket_batch",
-           "OPS", "ROUTES", "TRIGGERS"]
+           "ExecutionStreams", "OPS", "ROUTES", "TRIGGERS"]
 
 #: Ops the engine serves.
 OPS = ("matpow", "expm")
@@ -263,6 +275,8 @@ class _Bucket:
     # kick()/priority bypass: the trigger name that forced this bucket due
     # at the next poll, or None while it batches normally.
     forced: Optional[str] = None
+    # Execution-stream id once dispatched (stats attribution), else None.
+    stream: Optional[int] = None
 
     def view(self) -> BucketView:
         return BucketView(self.key, len(self.members), self.first_ts,
@@ -389,6 +403,12 @@ class MatFnEngine:
         monotonic clock); tests inject
         :class:`~repro.serve.scheduler.ManualClock` to drive deadlines
         deterministically.
+      streams: an :class:`~repro.serve.streams.ExecutionStreams` config
+        mapping dispatch routes onto executor worker threads (daemon mode
+        only). Default: one stream per route, so a chain bucket in flight
+        never delays a due xla or priority flush; ``ExecutionStreams(
+        streams=1)`` serializes every route through one worker (the
+        pre-streams schedule). Must cover every engine route.
     """
 
     def __init__(self, *, mesh=None, interpret: bool = False,
@@ -400,7 +420,8 @@ class MatFnEngine:
                  admission: Optional[AdmissionControl] = None,
                  watchdog: Optional[Watchdog] = None,
                  retries: int = 1,
-                 retry_backoff_s: float = 0.0):
+                 retry_backoff_s: float = 0.0,
+                 streams: Optional[ExecutionStreams] = None):
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
         if max_delay_ms is not None and not max_delay_ms > 0:
@@ -427,6 +448,19 @@ class MatFnEngine:
         self._watchdog = watchdog if watchdog is not None else Watchdog()
         self.retries = int(retries)
         self.retry_backoff_s = float(retry_backoff_s)
+        self._streams = streams if streams is not None else ExecutionStreams()
+        missing = [r for r in ROUTES if r not in self._streams.routes]
+        if missing:
+            raise ValueError(
+                f"streams config must cover every engine route; "
+                f"missing {missing} from {self._streams.routes}")
+        # Executor worker pool (daemon mode only; created by start()).
+        self._pool: Optional[StreamPool] = None
+        # Streams execute buckets concurrently, so the shared counters in
+        # stats (and the executable cache) need their own leaf lock — held
+        # only around counter/cache updates, never across execution, and
+        # never while taking _cv or the pool lock.
+        self._stats_lock = threading.Lock()
         # Memoized dispatch resolutions, each stored WITH the autotune
         # generation it was resolved under and validated on read (a retuned
         # cache reroutes the running engine, not just the next one).
@@ -561,6 +595,7 @@ class MatFnEngine:
         # bucket already exists — the lookup is memoized.
         delay_s = self._lane_delay_s(key, lane)
         victim: Optional[MatFnFuture] = None
+        direct: Optional[_Bucket] = None
         shed_depth = 0
         with self._cv:
             if self._closing or self._closed:
@@ -599,12 +634,21 @@ class MatFnEngine:
                                            self._lane_depth[lane])
             self.stats["requests"] += 1
             # Priority bypass: above the size threshold a latency request's
-            # own execution dominates any batching win — mark the bucket
-            # due NOW (dedicated "priority" trigger; the scheduler also
-            # orders latency-lane flushes before bulk ones).
+            # own execution dominates any batching win. With
+            # ``bypass_direct`` (the default) the bucket is handed straight
+            # to its route's execution stream below — it never waits for a
+            # scheduler poll, so a scheduler busy dispatching bulk backlog
+            # cannot delay it. Otherwise it is only MARKED due (dedicated
+            # "priority" trigger; the next scheduler poll dispatches it).
             if (lane == "latency" and bucket.forced is None
                     and req.n >= self._admission.bypass_n):
-                bucket.forced = "priority"
+                if self._admission.bypass_direct and self._pool is not None:
+                    del self._open_buckets[(key, lane)]
+                    self._lane_depth[lane] -= len(bucket.members)
+                    self._in_flight.append(bucket)
+                    direct = bucket
+                else:
+                    bucket.forced = "priority"
             self._policy.observe(bucket.view(), now)
             # Wake the scheduler only when this submit can change what it
             # should do: a NEW bucket moves its sleep deadline, a filled
@@ -615,10 +659,14 @@ class MatFnEngine:
             # scheduler's current sleep doesn't already cover, and
             # skipping the wake there is most of the submit path's cost
             # (wake -> scan -> re-sleep, ~6x per-submit).
-            if (opened or bucket.forced is not None
-                    or len(bucket.members) >= self.max_batch
-                    or self._policy.wake_on_observe):
+            if direct is None and (opened or bucket.forced is not None
+                                   or len(bucket.members) >= self.max_batch
+                                   or self._policy.wake_on_observe):
                 self._cv.notify_all()
+        if direct is not None:
+            # Outside the lock: dispatch takes the pool lock, and a full
+            # stream queue must not stall other producers behind _cv.
+            self._dispatch_bucket(direct, "priority")
         if victim is not None:
             # Outside the lock: set_exception wakes the victim's waiters.
             self._resolve(victim, exc=ShedError(
@@ -714,6 +762,17 @@ class MatFnEngine:
     # -- executable cache --------------------------------------------------
     def _executable(self, op: str, route: str, padded_batch: int, n: int,
                     dtype: str, power: int):
+        # The whole lookup-or-build runs under the stats lock: concurrent
+        # streams sharing one cache must count exactly one compile per key
+        # (the stream-count-invariance suite asserts exact accounting).
+        # Building is cheap to hold a lock across — jax.jit only WRAPS
+        # here; actual compilation happens on first call, on the stream.
+        with self._stats_lock:
+            return self._executable_locked(op, route, padded_batch, n,
+                                           dtype, power)
+
+    def _executable_locked(self, op: str, route: str, padded_batch: int,
+                           n: int, dtype: str, power: int):
         key = (op, route, padded_batch, n, dtype, power)
         exe = self._executables.get(key)
         if exe is not None:
@@ -766,17 +825,37 @@ class MatFnEngine:
         path. Call before opening traffic (warm chunks count into the
         engine stats like any other bucket execution); returns the number
         of chunks warmed.
+
+        In daemon mode each warm chunk runs ON its route's execution
+        stream (queued FIFO behind any dispatched buckets): the compile
+        lands on the thread that will serve the route, streams warm in
+        parallel, and a fresh stream's first post-warm flush pays zero
+        compiles. Synchronous engines warm on the calling thread.
         """
         dtype = jnp.dtype(dtype)
         if batches is None:
             batches = range(1, self.max_batch + 1)
         power = power if op == "matpow" else -1
-        count = 0
+        with self._cv:
+            pool = self._pool
+
+        def chunk_job(operands):
+            return lambda: jax.block_until_ready(
+                self._run_chunk(op, n, dtype.name, power, operands))
+
+        count, jobs = 0, []
         for b in batches:
             operands = [jnp.zeros((n, n), dtype) for _ in range(b)]
-            jax.block_until_ready(
-                self._run_chunk(op, n, dtype.name, power, operands))
+            if pool is not None:
+                stream = self._streams.stream_for(
+                    self.route_for(n, b, dtype.name))
+                jobs.append(pool.call(stream, chunk_job(operands)))
+            else:
+                jax.block_until_ready(
+                    self._run_chunk(op, n, dtype.name, power, operands))
             count += 1
+        for job in jobs:       # propagate compile errors to the caller
+            job.result()
         return count
 
     # -- bucket execution core (shared by flush() and the daemon) ----------
@@ -793,7 +872,6 @@ class MatFnEngine:
         route = self.route_for(n, b, dtype)
         bpad = 1 if route == "sharded" else bucket_batch(b, self.max_batch)
         stack = _assemble(tuple(operands), bpad=bpad)
-        self.stats["padded_slots"] += bpad - b
         key, exe = self._executable(op, route, bpad, n, dtype, power)
         if self.profile:
             # Per-bucket wall time for the stats rows — blocks each bucket,
@@ -806,11 +884,13 @@ class MatFnEngine:
             out = exe(stack)
             dt = None
         rows = _split_rows(out, b=b)   # drops the filler slots too
-        self.stats["buckets"] += 1
-        self.stats["routes"][route] += 1
-        self.stats["last_flush"].append(
-            {"key": key, "requests": b, "padded_batch": bpad,
-             "route": route, "seconds": dt})
+        with self._stats_lock:
+            self.stats["padded_slots"] += bpad - b
+            self.stats["buckets"] += 1
+            self.stats["routes"][route] += 1
+            self.stats["last_flush"].append(
+                {"key": key, "requests": b, "padded_batch": bpad,
+                 "route": route, "seconds": dt})
         return rows
 
     # -- synchronous batch execution ---------------------------------------
@@ -866,6 +946,12 @@ class MatFnEngine:
                     f"{len(self._pending)} synchronous request(s) pending; "
                     f"flush() before start() — tickets would never resolve")
             self._clock.bind(self._cv)
+            # Executor streams first: the scheduler dispatches into the
+            # pool from its very first poll. Lock order is engine -> pool
+            # only, so starting it under _cv cannot deadlock.
+            self._pool = StreamPool(self._streams, self._stream_execute,
+                                    on_free=self._on_stream_free,
+                                    on_crash=self._on_stream_crash).start()
             # Assigned AND started under the lock: from here every submit
             # routes to the daemon (see the mode check in submit()), and a
             # concurrent close() can never join a not-yet-started thread.
@@ -908,14 +994,16 @@ class MatFnEngine:
         return kicked
 
     def settle(self, timeout: float = 10.0) -> None:
-        """Block until the scheduler has flushed everything currently due
-        and gone idle (waiting for new work or a future deadline).
+        """Block until the scheduler has DISPATCHED everything currently
+        due, every execution stream has finished what it was handed, and
+        the daemon is idle (waiting for new work or a future deadline).
 
         Instrumentation/test hook: with a :class:`ManualClock` this makes
-        "the daemon processed that wakeup" a deterministic event. Raises
-        ``TimeoutError`` if the scheduler does not settle in ``timeout``
-        real seconds (a crashed scheduler surfaces here instead of
-        hanging). No-op in synchronous mode.
+        "the daemon processed that wakeup" a deterministic event (stream
+        completions notify the engine condition, so stream idleness is an
+        event too, not a poll). Raises ``TimeoutError`` if the scheduler
+        does not settle in ``timeout`` real seconds (a crashed scheduler
+        surfaces here instead of hanging). No-op in synchronous mode.
         """
         if self._daemon is None:
             return
@@ -925,9 +1013,14 @@ class MatFnEngine:
                 if self._scheduler_crash is not None:
                     raise RuntimeError("scheduler thread crashed") \
                         from self._scheduler_crash
-                if not self._daemon.is_alive() and not self._open_buckets:
+                streams_idle = (not self._in_flight
+                                and (self._pool is None
+                                     or self._pool.idle()))
+                if not self._daemon.is_alive() and not self._open_buckets \
+                        and streams_idle:
                     return
-                if self._waiting and not self._any_due(self._clock.now()):
+                if self._waiting and streams_idle \
+                        and not self._any_due(self._clock.now()):
                     return
                 remaining = deadline - time.monotonic()
                 if remaining <= 0:
@@ -960,10 +1053,12 @@ class MatFnEngine:
             self._closed = True
             return
         cancelled: List[_Bucket] = []
+        cancel = False
         with self._cv:
-            if not drain and not self._closing:
+            cancel = not drain and not self._closing
+            if cancel:
                 # Open buckets are dropped outright; in-flight buckets are
-                # only COPIED — the scheduler still owns them, and their
+                # only COPIED — their stream still owns them, and their
                 # futures are poisoned best-effort below (the resolution
                 # race against a finishing executor is settled by the
                 # futures' single-assignment lock, whoever wins).
@@ -973,6 +1068,16 @@ class MatFnEngine:
                 self._lane_depth = {lane: 0 for lane in LANES}
             self._closing = True
             self._cv.notify_all()
+        if cancel and self._pool is not None:
+            # Queued-but-unstarted buckets never run: pull them off their
+            # streams (they are already in the cancelled snapshot via
+            # _in_flight) so the drain wait doesn't execute doomed work.
+            dropped = [b for b, _t in self._pool.cancel_queued()]
+            with self._cv:
+                for b in dropped:
+                    if b in self._in_flight:
+                        self._in_flight.remove(b)
+                self._cv.notify_all()
         for bucket in cancelled:
             err = CancelledError(f"engine closed with drain=False; bucket "
                                  f"{bucket.key} dropped")
@@ -984,6 +1089,17 @@ class MatFnEngine:
             raise TimeoutError(
                 f"scheduler still draining after {timeout}s; engine is "
                 f"closed to new submits, pending futures may yet resolve")
+        if self._pool is not None:
+            # The scheduler's drain wait already saw the streams idle;
+            # shutdown + join releases the worker threads (the suite's
+            # thread-leak check counts on active_count() returning to its
+            # pre-start baseline after close()).
+            self._pool.shutdown()
+            if not self._pool.join(timeout):
+                raise TimeoutError(
+                    f"execution streams still busy after {timeout}s; "
+                    f"engine is closed to new submits, pending futures "
+                    f"may yet resolve")
 
     # -- scheduler internals -----------------------------------------------
     def _any_due(self, now: float) -> bool:
@@ -1035,6 +1151,15 @@ class MatFnEngine:
         try:
             self._scheduler_loop()
         except BaseException as exc:  # never die silently: fail what's left
+            # Streams first: pull queued-but-unstarted buckets off every
+            # stream (they are registered in _in_flight, so the sweep
+            # below reaches their futures) — with no scheduler left to
+            # hand out work there is no point executing a dead engine's
+            # backlog. Buckets already EXECUTING finish on their streams;
+            # their resolutions race the sweep and the futures'
+            # single-assignment lock settles who wins.
+            if self._pool is not None:
+                self._pool.cancel_queued()
             with self._cv:
                 self._scheduler_crash = exc
                 leftovers = (list(self._in_flight)
@@ -1051,24 +1176,42 @@ class MatFnEngine:
                     # set_exception must not abort the sweep and strand
                     # the REST of the leftovers unresolved.
                     self._resolve(fut, exc=err)
+        else:
+            # Normal exit (close drain): joining the scheduler thread must
+            # keep meaning "fully drained", so wait for every dispatched
+            # bucket to clear its stream before dying. Stream completions
+            # notify _cv; SystemClock slices the wait so a worker that
+            # dies without its final notify cannot hang the drain.
+            self._drain_streams()
+
+    def _drain_streams(self) -> None:
+        if self._pool is None:
+            return
+        with self._cv:
+            self._clock.wait_for(
+                self._cv,
+                lambda: not self._in_flight and self._pool.idle())
 
     def _scheduler_loop(self) -> None:
         """Fill-or-deadline scheduling: sleep until the earliest deadline
-        (or a submit/kick/close wakeup), flush what is due, repeat.
+        (or a submit/kick/close wakeup), hand what is due to its route's
+        execution stream, repeat.
 
-        Buckets execute OUTSIDE the lock, so producers keep assembling the
-        next buckets while the device crunches the current ones — and
-        because execution dispatches asynchronously (``profile=False``),
-        futures resolve with in-flight arrays and the host moves straight
-        on to the next bucket: device work overlaps host-side assembly.
+        The scheduler never executes buckets itself: each due bucket goes
+        to its dispatch route's stream (:class:`~repro.serve.streams.
+        StreamPool`), so producers keep assembling the next buckets while
+        the streams crunch the current ones — and a big chain bucket in
+        flight no longer delays a due xla flush, because they live on
+        different streams.
 
-        Between bucket executions the loop re-checks the LATENCY lane: a
-        priority bucket that became due while a bulk flush ran jumps the
-        remaining bulk backlog (preemption at bucket granularity — a
-        latency request waits for at most ONE in-progress bulk flush, not
-        for every bulk bucket popped in the same poll; under overload
-        that is the difference between the priority lane tracking its SLO
-        and inheriting the bulk queue's tail).
+        Latency preemption moved WITH execution: ``_take_due`` still
+        orders latency-lane buckets first within one poll, and on each
+        stream a dispatched latency bucket queues ahead of every
+        not-yet-started bulk one — a latency request waits for at most
+        ONE in-progress execution on its own stream, and for nothing at
+        all on the others. Under overload that is the difference between
+        the priority lane tracking its SLO and inheriting the bulk
+        queue's tail.
         """
         while True:
             with self._cv:
@@ -1085,14 +1228,79 @@ class MatFnEngine:
                         self._clock.wait(self._cv, self._next_timeout(now))
                     finally:
                         self._waiting = False
-            while due:
-                bucket, trigger = due.pop(0)
-                self._execute_bucket(bucket, trigger)
-                self._in_flight.remove(bucket)   # fully resolved
-                if due and due[0][0].lane != "latency":
-                    with self._cv:
-                        due[:0] = self._take_due(self._clock.now(),
-                                                 lane="latency")
+            for bucket, trigger in due:
+                self._dispatch_bucket(bucket, trigger)
+
+    def _dispatch_bucket(self, bucket: _Bucket, trigger: str) -> None:
+        """Hand one popped bucket to its route's execution stream.
+
+        The chunk route is recomputed per chunk inside ``_run_chunk``
+        (identical logic), so stream placement and math always agree for
+        buckets <= max_batch; an oversized bucket's tail chunk may route
+        differently than its head, in which case the whole bucket runs on
+        the head chunk's stream — placement is a scheduling choice, the
+        math per chunk is unchanged. A crashed stream fails just this
+        bucket's futures (typed, attributable) instead of sinking the
+        scheduler.
+        """
+        op, n, dtype, _power = bucket.key
+        route = self.route_for(n, min(len(bucket.members), self.max_batch),
+                               dtype)
+        try:
+            bucket.stream = self._pool.dispatch(
+                route, bucket, trigger,
+                priority=(bucket.lane == "latency"))
+        except StreamCrashed as exc:
+            with self._cv:
+                if bucket in self._in_flight:
+                    self._in_flight.remove(bucket)
+                self._cv.notify_all()
+            err = BucketExecutionError(bucket.key, exc)
+            for fut, _ in bucket.members:
+                self._resolve(fut, exc=err)
+
+    def _stream_execute(self, bucket: _Bucket, trigger: str,
+                        stream: int) -> None:
+        """The pool's executor: runs on a stream worker. Executor
+        ``Exception``\\ s are already routed into futures by
+        ``_execute_bucket``; the finally block de-registers the bucket and
+        wakes anyone waiting on "a stream freed" (settle, the drain wait,
+        a ManualClock test) even when a non-Exception escape is about to
+        crash the stream."""
+        del stream  # identity is recorded at dispatch (bucket.stream)
+        try:
+            self._execute_bucket(bucket, trigger)
+        finally:
+            with self._cv:
+                if bucket in self._in_flight:
+                    self._in_flight.remove(bucket)
+                self._cv.notify_all()
+
+    def _on_stream_free(self, stream: int) -> None:
+        """Pool callback (outside the pool lock): a stream finished an
+        item — wake settle()/drain waiters blocked on the engine cv."""
+        del stream
+        with self._cv:
+            self._cv.notify_all()
+
+    def _on_stream_crash(self, stream: int, items: List[tuple],
+                         exc: BaseException) -> None:
+        """Pool callback (outside the pool lock): stream ``stream`` died
+        executing ``items[0]``; ``items[1:]`` are its queued-but-unstarted
+        buckets. Every affected future is failed with a typed
+        :class:`BucketExecutionError`; other streams keep serving."""
+        buckets = [b for b, _t in items]
+        with self._cv:
+            for b in buckets:
+                if b in self._in_flight:
+                    self._in_flight.remove(b)
+            self._cv.notify_all()
+        for b in buckets:
+            err = BucketExecutionError(b.key, exc)
+            for fut, _ in b.members:
+                # Tolerant: the crashing execution may have resolved part
+                # of the bucket before dying.
+                self._resolve(fut, exc=err)
 
     def _resolve(self, fut: MatFnFuture, value=_UNSET,
                  exc: Optional[BaseException] = None) -> bool:
@@ -1120,10 +1328,11 @@ class MatFnEngine:
         poisoned compile-cache entry costs one recompile instead of
         poisoning the class forever."""
         op, n, dtype, power = key
-        stale = [k for k in self._executables
-                 if (k[0], k[3], k[4], k[5]) == (op, n, dtype, power)]
-        for k in stale:
-            del self._executables[k]
+        with self._stats_lock:
+            stale = [k for k in self._executables
+                     if (k[0], k[3], k[4], k[5]) == (op, n, dtype, power)]
+            for k in stale:
+                del self._executables[k]
         return len(stale)
 
     def _execute_bucket(self, bucket: _Bucket, trigger: str) -> None:
@@ -1147,8 +1356,9 @@ class MatFnEngine:
         alive for the other buckets either way.
         """
         op, n, dtype, power = bucket.key
-        self.stats["flush_triggers"][trigger] += 1
         lane_stats = self.stats["lanes"][bucket.lane]
+        with self._stats_lock:
+            self.stats["flush_triggers"][trigger] += 1
         members = bucket.members
         for lo in range(0, len(members), self.max_batch):
             chunk = members[lo:lo + self.max_batch]
@@ -1162,8 +1372,9 @@ class MatFnEngine:
 
             def on_retry(attempt, exc):
                 self._evict_class_executables(bucket.key)
-                self.stats["retries"] += 1
-                lane_stats["retried"] += len(chunk)
+                with self._stats_lock:
+                    self.stats["retries"] += 1
+                    lane_stats["retried"] += len(chunk)
 
             t0 = time.perf_counter()
             try:
@@ -1176,18 +1387,25 @@ class MatFnEngine:
                     self._resolve(fut, exc=err)
                 continue
             finally:
+                # Watchdog.observe serializes internally: concurrent
+                # streams share one rolling median without a cross-stream
+                # head-of-line stall (retry BACKOFF sleeps on this
+                # stream's own worker only).
                 event = self._watchdog.observe(self.stats["buckets"],
                                                time.perf_counter() - t0)
                 if event is not None:
-                    self.stats["stragglers"] += 1
+                    with self._stats_lock:
+                        self.stats["stragglers"] += 1
                     self._straggler_log.append(
                         f"{event} (bucket {bucket.key}, lane {bucket.lane})")
             for (fut, _), row in zip(chunk, rows):
                 self._resolve(fut, value=row)
-            lane_stats["flushed"] += len(chunk)
-        rows_log = self.stats["last_flush"]
-        if len(rows_log) > _LAST_FLUSH_ROWS:
-            del rows_log[:len(rows_log) - _LAST_FLUSH_ROWS]
+            with self._stats_lock:
+                lane_stats["flushed"] += len(chunk)
+        with self._stats_lock:
+            rows_log = self.stats["last_flush"]
+            if len(rows_log) > _LAST_FLUSH_ROWS:
+                del rows_log[:len(rows_log) - _LAST_FLUSH_ROWS]
 
     # -- observability -----------------------------------------------------
     def _stats_snapshot(self) -> dict:
@@ -1215,22 +1433,42 @@ class MatFnEngine:
                 row["p50_ms"] = None if p50 is None else p50 * 1e3
                 row["p95_ms"] = None if p95 is None else p95 * 1e3
                 lanes[lane] = row
-            return {
-                "requests": self.stats["requests"],
-                "buckets": self.stats["buckets"],
-                "compiles": self.stats["compiles"],
-                "cache_hits": self.stats["cache_hits"],
-                "padded_slots": self.stats["padded_slots"],
-                "stragglers": self.stats["stragglers"],
-                "retries": self.stats["retries"],
-                "routes": dict(self.stats["routes"]),
-                "flush_triggers": dict(self.stats["flush_triggers"]),
-                "lanes": lanes,
-                "open_buckets": len(self._open_buckets),
-                "in_flight": len(self._in_flight),
-                "straggler_events": list(self._straggler_log),
-                "admission_policy": self._admission.policy.name,
-            }
+            # Per-stream rows: the pool's own counters merged with the
+            # engine's view of which dispatched buckets are still
+            # unresolved on each stream. Lock order _cv -> pool lock is
+            # the canonical direction; _stats_lock is a leaf and guards
+            # the counters the streams mutate.
+            streams = []
+            peak = 0
+            if self._pool is not None:
+                per_stream: dict = {}
+                for b in self._in_flight:
+                    if b.stream is not None:
+                        per_stream[b.stream] = per_stream.get(b.stream,
+                                                              0) + 1
+                streams = self._pool.snapshot()
+                for row in streams:
+                    row["in_flight"] = per_stream.get(row["stream"], 0)
+                peak = self._pool.peak_concurrent
+            with self._stats_lock:
+                return {
+                    "requests": self.stats["requests"],
+                    "buckets": self.stats["buckets"],
+                    "compiles": self.stats["compiles"],
+                    "cache_hits": self.stats["cache_hits"],
+                    "padded_slots": self.stats["padded_slots"],
+                    "stragglers": self.stats["stragglers"],
+                    "retries": self.stats["retries"],
+                    "routes": dict(self.stats["routes"]),
+                    "flush_triggers": dict(self.stats["flush_triggers"]),
+                    "lanes": lanes,
+                    "open_buckets": len(self._open_buckets),
+                    "in_flight": len(self._in_flight),
+                    "streams": streams,
+                    "peak_concurrent_streams": peak,
+                    "straggler_events": list(self._straggler_log),
+                    "admission_policy": self._admission.policy.name,
+                }
 
     # -- convenience single-request API ------------------------------------
     def matpow(self, a: jax.Array, power: int) -> jax.Array:

@@ -167,6 +167,25 @@ class Clock:
     def wait(self, cv: threading.Condition, timeout: Optional[float]) -> None:
         raise NotImplementedError
 
+    def wait_for(self, cv: threading.Condition, predicate,
+                 poll: float = 0.05) -> None:
+        """Block (``cv`` held) until ``predicate()`` is true.
+
+        The stream-free wake path: execution streams notify the engine's
+        condition when a worker finishes a bucket, and the scheduler's
+        drain wait (``close(drain=True)`` must not report a completed
+        drain while a stream still holds buckets) plus ``settle()`` sleep
+        here until streams go idle. The wake SEMANTICS are
+        clock-dependent, which is why this lives on the clock:
+        ``SystemClock`` slices the wait by ``poll`` so a worker that dies
+        without its final notify cannot hang the scheduler forever, while
+        ``ManualClock`` ignores ``poll`` entirely (its ``wait`` blocks
+        until a notify) — "a stream freed" is then a deterministic event
+        in zero-sleep tests, exactly like "the deadline passed".
+        """
+        while not predicate():
+            self.wait(cv, poll)
+
     def bind(self, cv: threading.Condition) -> None:
         """Register a scheduler's condition (manual clocks wake it on
         ``advance``); the default is a no-op."""

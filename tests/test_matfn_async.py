@@ -46,6 +46,11 @@ from repro.serve.matfn import (BucketExecutionError, MatFnEngine,
 from repro.serve.scheduler import (AdaptiveDeadline, BucketView,
                                    FillOrDeadline, ManualClock, SystemClock)
 
+# Concurrency suite: a wedged daemon/stream thread must FAIL the test,
+# not hang the run (enforced when pytest-timeout is installed; see
+# tests/README.md).
+pytestmark = pytest.mark.timeout(120)
+
 TIMEOUT = 30.0   # real-time backstop on event waits; never load-bearing
 
 
