@@ -121,6 +121,20 @@ SPECS = {
         Metric("overload.cold_p95_over_hot_p95", "lower", 1.5),
         Metric("overload.tenants.cold.served", "higher", 0.8),
     ],
+    "BENCH_fastmm.json": [
+        # The Strassen route's reason to exist: its speedup over the tuned
+        # dense squaring at the gate size (the absolute >= 1.0x floor
+        # lives in ci.yml; the band catches the win eroding). Timings get
+        # the usual 2x machine-variance band.
+        Metric("gate.speedup", "higher", 0.35),
+        # Accuracy against fastmm.error_budget is a property of the math,
+        # not the machine: it must never flip.
+        Metric("gate.within_budget", "equal"),
+        Metric("rows.n1536.within_budget", "equal"),
+        Metric("rows.n1536.dense_us", "lower", 1.0),
+        Metric("rows.n1536.fastmm_us", "lower", 1.0),
+        Metric("rows.n512.fastmm_us", "lower", 1.0),
+    ],
 }
 
 _MISSING = object()

@@ -12,12 +12,13 @@ TPU:
     mxu_aligned         all dims multiples of 128?
 plus a correctness check against the ref.py oracle at every config.
 
-The sweep feeds all three namespaces of the persistent autotuner
+The sweep feeds the kernel namespaces of the persistent autotuner
 (repro.kernels.autotune): winning tilings are recorded under their problem
 keys so ops.pick_blocks / ops.pick_attn_blocks — and therefore every
 ops.matmul, MatmulChain, flash_attention, and models.layers.dense on these
-problem sizes — reuse them, and the square_pallas tier thresholds are
-published as the ``square_panel`` entry.
+problem sizes — reuse them, the square_pallas tier thresholds are
+published as the ``square_panel`` entry, and the Strassen crossover as the
+``fastmm`` entry.
 """
 
 from __future__ import annotations
@@ -152,12 +153,39 @@ def _square_tier_section(rows):
     })
 
 
+def _fastmm_section(rows):
+    """Publish the Strassen crossover (timed dense-vs-depth-1 probing on
+    TPU, the modeled defaults elsewhere) and probe the recursion against
+    the oracle at a deliberately odd size — every level pads."""
+    rng = np.random.default_rng(3)
+    from repro.kernels import fastmm
+    a = jnp.asarray(rng.standard_normal((101, 101)) * 0.1, jnp.float32)
+    want = np.float32(ref.matmul_ref(a, a))
+    got = fastmm.strassen_square(a, levels=2, crossover=16)
+    rel = (float(np.abs(np.float32(got) - want).max())
+           / float(np.abs(want).max()))
+    rows.append({
+        "name": "fastmm_strassen_101_d2",
+        "us_per_call": 0.0,
+        "derived": f"rel_err={rel:.1e}",
+    })
+
+    crossover, levels = autotune.sweep_fastmm(dtype=jnp.float32)
+    rows.append({
+        "name": "autotune_fastmm",
+        "us_per_call": 0.0,
+        "derived": (f"crossover={crossover};levels={levels};"
+                    f"cache={autotune.cache_path()}"),
+    })
+
+
 def main(rows=None):
     own = rows is None
     rows = [] if own else rows
     _matmul_section(rows)
     _attention_section(rows)
     _square_tier_section(rows)
+    _fastmm_section(rows)
     if own:
         for r in rows:
             print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")

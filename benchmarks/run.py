@@ -12,7 +12,8 @@ so the perf trajectory is tracked across PRs:
                          squarings) vs the seed per-multiply ops.matmul path
   * autotune           — populates / reuses the persistent tuning cache
                          across all kernel namespaces (matmul, attention,
-                         square_panel tiers) — ~/.cache/repro/autotune.json,
+                         square_panel tiers, the fastmm Strassen
+                         crossover) — ~/.cache/repro/autotune.json,
                          REPRO_AUTOTUNE_CACHE to override; delete the file
                          to force a re-sweep
   * kernel_sweep       — the paper's tile-size sweep on the Pallas kernels:
@@ -139,6 +140,13 @@ def autotune_bench(rows, sizes=(256, 512), attn=(1024, 1024, 128)):
         "name": "autotune_square_tiers",
         "us_per_call": 0.0,
         "derived": f"whole_limit={whole};panel_limit={panel}",
+    })
+
+    crossover, levels, _ = autotune.fastmm_config(dtype=jnp.float32)
+    rows.append({
+        "name": "autotune_fastmm",
+        "us_per_call": 0.0,
+        "derived": f"crossover={crossover};levels={levels}",
     })
 
 

@@ -80,12 +80,12 @@ class BatchedMatmulChain(_kops.MatmulChain):
     """
 
     def __init__(self, batch: int, n: int, dtype, *, interpret: bool = False,
-                 blocks=None, donate: bool = True):
+                 blocks=None, donate: bool = True, fast=False):
         if not isinstance(batch, int) or batch < 1:
             raise ValueError(f"batched chains need a static batch >= 1, "
                              f"got {batch!r}")
         super().__init__(n, dtype, interpret=interpret, blocks=blocks,
-                         donate=donate)
+                         donate=donate, fast=fast)
         self.batch = batch
 
     # -- chain boundary ----------------------------------------------------
@@ -101,6 +101,10 @@ class BatchedMatmulChain(_kops.MatmulChain):
     def square(self, x: jax.Array) -> jax.Array:
         """x @ x for the whole stack in ONE dispatch; CONSUMES x when eager."""
         if self.donate and not isinstance(x, jax.core.Tracer):
+            if self.fast:
+                # The donated Strassen step slices the stack's trailing dims
+                # and batches its leaves natively — already ONE dispatch.
+                return super().square(x)
             if not self.active:
                 return _batched_square_step_ref(x)
             bm, bn, bk = self.blocks
@@ -123,8 +127,11 @@ def batched_matpow(a: jax.Array, p: int, *, backend: str = "xla") -> jax.Array:
     ``backend`` follows :func:`repro.core.matpow.matmul_backend` names; the
     ``"pallas_chain[_interpret]"`` routes run through
     :class:`BatchedMatmulChain` (pad the stack once, donated batched
-    squarings, unpad once), everything else falls through to the already
-    batch-capable :func:`matpow_binary`.
+    squarings, unpad once), the ``"pallas_fastmm[_interpret]"`` routes run
+    the same chain with Strassen recursion per squaring
+    (tolerance-bounded — see ``kernels.fastmm.error_budget``), and
+    everything else falls through to the already batch-capable
+    :func:`matpow_binary`.
 
     ``p`` must be a static python int >= 0; ``p == 0`` returns a stack of
     identities (the same contract as every other matpow entry point).
@@ -147,7 +154,8 @@ def batched_matpow(a: jax.Array, p: int, *, backend: str = "xla") -> jax.Array:
     if p == 0:
         return jnp.broadcast_to(jnp.eye(a.shape[-1], dtype=a.dtype), a.shape)
     chain = BatchedMatmulChain(a.shape[0], a.shape[-1], a.dtype,
-                               interpret=interpret)
+                               interpret=interpret,
+                               fast=backend in _matpow._FAST_BACKENDS)
     return chain.unpad(_matpow._binary_chain_body(chain.pad(a), p, chain))
 
 

@@ -47,7 +47,14 @@ __all__ = [
 
 
 # backend name -> interpret flag for the fused chain-execution route.
-_CHAIN_BACKENDS = {"pallas_chain": False, "pallas_chain_interpret": True}
+# The ``fastmm`` pair runs the same chain with Strassen recursion per
+# multiply (``kernels.fastmm``; tolerance-bounded, NOT bit-identical to the
+# dense pair — see ``fastmm.error_budget``).
+_CHAIN_BACKENDS = {"pallas_chain": False, "pallas_chain_interpret": True,
+                   "pallas_fastmm": False, "pallas_fastmm_interpret": True}
+
+#: Chain backends whose multiplies take the Strassen route.
+_FAST_BACKENDS = frozenset({"pallas_fastmm", "pallas_fastmm_interpret"})
 
 
 def matmul_backend(backend: str = "xla", precision=None) -> Callable:
@@ -61,6 +68,9 @@ def matmul_backend(backend: str = "xla", precision=None) -> Callable:
         route. The matpow/expm entry points recognize these and hoist
         padding to the chain boundary via :func:`chain_for`; as a bare
         (a, b) callable this behaves like the matching per-call kernel.
+      * ``"pallas_fastmm"`` / ``"pallas_fastmm_interpret"`` — the fused
+        chain with Strassen recursion per multiply (above the autotuned
+        crossover); as a bare callable this is ``fastmm.strassen_matmul``.
     """
     if backend == "xla":
         def mm(a, b):
@@ -70,6 +80,10 @@ def matmul_backend(backend: str = "xla", precision=None) -> Callable:
     if backend in ("pallas", "pallas_interpret"):
         from repro.kernels import ops as kops
         return functools.partial(kops.matmul, interpret=(backend == "pallas_interpret"))
+    if backend in _FAST_BACKENDS:
+        from repro.kernels import fastmm as _fastmm
+        return functools.partial(_fastmm.strassen_matmul,
+                                 interpret=_CHAIN_BACKENDS[backend])
     if backend in _CHAIN_BACKENDS:
         from repro.kernels import ops as kops
         return functools.partial(kops.matmul, interpret=_CHAIN_BACKENDS[backend])
@@ -90,7 +104,8 @@ def chain_for(a: jax.Array, backend: str, donate: bool = True):
     from repro.kernels import ops as kops
     return kops.MatmulChain(a.shape[-1], a.dtype,
                             interpret=_CHAIN_BACKENDS[backend],
-                            donate=donate)
+                            donate=donate,
+                            fast=backend in _FAST_BACKENDS)
 
 
 def _accum_dtype(dtype) -> jnp.dtype:

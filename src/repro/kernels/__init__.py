@@ -8,16 +8,22 @@ ops.py       : jit'd public wrappers (padding, batching, backend dispatch),
                the fused chain executor (MatmulChain), the dense-layer
                routing (dense_matmul), and the block pickers
                (pick_blocks / pick_attn_blocks).
+fastmm.py    : Strassen fast matmul over the tuned dense leaves — the
+               chain's fast=True route and the serving engine's "fastmm"
+               dispatch route (tolerance-bounded, NOT bit-exact; see
+               fastmm.error_budget).
 autotune.py  : the persistent kernel-registry tuning cache (the paper's
                measured sweep, namespaced per kernel — matmul / attention /
-               square_panel — cached on disk, consulted by the pickers).
-               See docs/autotuning.md.
+               square_panel / dispatch / fastmm — cached on disk, consulted
+               by the pickers). See docs/autotuning.md.
 ref.py       : pure-jnp oracles every kernel is swept against.
 """
 
-from repro.kernels import autotune, ops, ref
+from repro.kernels import autotune, fastmm, ops, ref
+from repro.kernels.fastmm import strassen_matmul, strassen_square
 from repro.kernels.ops import (MatmulChain, attention, dense_matmul, matmul,
                                square)
 
-__all__ = ["autotune", "ops", "ref", "matmul", "square", "attention",
-           "dense_matmul", "MatmulChain"]
+__all__ = ["autotune", "fastmm", "ops", "ref", "matmul", "square",
+           "attention", "dense_matmul", "MatmulChain", "strassen_matmul",
+           "strassen_square"]

@@ -20,6 +20,14 @@ Namespaces (the ``kernel`` key segment):
   * ``square_panel`` — the VMEM tier thresholds of ``square_pallas``
                        (whole-operand-resident limit, panel-resident limit);
                        consulted by ``square_tiers``.
+  * ``fastmm``       — the Strassen fast-matmul route's knobs: the crossover
+                       size above which a squaring/multiply recurses one
+                       Strassen level instead of running dense, the recursion
+                       depth cap, and (optionally) the leaf tile shapes; all
+                       per dtype/backend. Consulted by ``fastmm_config`` (the
+                       ``kernels.fastmm`` recursion, ``ops.MatmulChain``'s
+                       ``fast`` path, and the serving engine's ``"fastmm"``
+                       dispatch route).
   * ``dispatch``     — the serving engine's scheduling knobs: the matrix-size
                        thresholds of heterogeneous dispatch (largest n kept on
                        the CPU/XLA route, smallest single-matrix n promoted to
@@ -85,6 +93,8 @@ __all__ = [
     "sweep_square_tiers",
     "DEFAULT_DISPATCH_THRESHOLDS", "dispatch_thresholds",
     "record_dispatch_thresholds",
+    "DEFAULT_FASTMM_CROSSOVER", "DEFAULT_FASTMM_LEVELS", "fastmm_config",
+    "record_fastmm", "sweep_fastmm",
     "DEFAULT_MAX_DELAY_MS", "bucket_deadline_ms", "record_bucket_deadline",
     "cache_generation",
 ]
@@ -92,7 +102,7 @@ __all__ = [
 _ENV_VAR = "REPRO_AUTOTUNE_CACHE"
 
 #: Kernel namespaces the cache knows about (the first segment of every key).
-KERNELS = ("matmul", "attention", "square_panel", "dispatch")
+KERNELS = ("matmul", "attention", "square_panel", "dispatch", "fastmm")
 
 #: Default VMEM working-set budget shared by ops.pick_blocks and the sweep
 #: scorer — ONE definition so the heuristic and the cache never disagree.
@@ -158,6 +168,19 @@ DEFAULT_DISPATCH_THRESHOLDS: tuple = (64, 4096)
 #: wait longer than their own execution time, tiny ones cannot.
 DEFAULT_MAX_DELAY_MS: float = 2.0
 
+#: Default Strassen fast-matmul crossover (matrix size n): multiplies with
+#: n above this recurse one Strassen level (7 half-size sub-products, ~1 bit
+#: of accuracy per level) until the sub-problem reaches the crossover or the
+#: level cap. Modeled default from a CPU measurement: one XLA-dot core only
+#: loses to depth-1 Strassen above ~1k (1.1-1.2x at n=1536), so the default
+#: stays conservative; ``sweep_fastmm`` retunes per backend/dtype.
+DEFAULT_FASTMM_CROSSOVER: int = 1024
+
+#: Default Strassen recursion-depth cap. Every level multiplies the error
+#: constant (~1 bit lost) and the sub-product bookkeeping, so depth is
+#: capped independently of the crossover.
+DEFAULT_FASTMM_LEVELS: int = 2
+
 # In-memory image of each cache file, keyed by resolved path.
 _MEM: dict = {}
 
@@ -218,6 +241,12 @@ def _dispatch_key(dtype=None, backend: Optional[str] = None) -> str:
     return f"dispatch/thresholds/{d}/{b}"
 
 
+def _fastmm_key(dtype=None, backend: Optional[str] = None) -> str:
+    d = jnp.dtype(dtype).name if dtype is not None else "any"
+    b = backend or jax.default_backend()
+    return f"fastmm/config/{d}/{b}"
+
+
 def _deadline_key(op: str, n: int, dtype=None,
                   backend: Optional[str] = None) -> str:
     d = jnp.dtype(dtype).name if dtype is not None else "any"
@@ -235,12 +264,26 @@ def _valid_entry(entry) -> bool:
     """A usable cache entry: a block tiling (len 2 for attention, len 3 for
     matmul), a ``square_panel`` tier pair or ``dispatch`` threshold pair
     (both: two ascending positive ints), or a ``dispatch`` deadline entry
-    (one positive finite ``max_delay_ms``)."""
+    (one positive finite ``max_delay_ms``), or a ``fastmm`` config entry
+    (``[crossover_n, max_levels]`` — positive int and non-negative int —
+    with optional 3-int positive ``leaf_blocks``)."""
     try:
         if "tiers" in entry:
             return _ascending_pair(entry["tiers"])
         if "thresholds" in entry:
             return _ascending_pair(entry["thresholds"])
+        if "fastmm" in entry:
+            cfg = entry["fastmm"]
+            leaf = entry.get("leaf_blocks")
+            return (len(cfg) == 2
+                    and isinstance(cfg[0], int) and not isinstance(cfg[0], bool)
+                    and cfg[0] > 0
+                    and isinstance(cfg[1], int) and not isinstance(cfg[1], bool)
+                    and cfg[1] >= 0
+                    and (leaf is None
+                         or (len(leaf) == 3
+                             and all(isinstance(x, int) and x > 0
+                                     for x in leaf))))
         if "max_delay_ms" in entry:
             v = entry["max_delay_ms"]
             return (isinstance(v, (int, float)) and not isinstance(v, bool)
@@ -422,6 +465,108 @@ def record_dispatch_thresholds(cpu_max_n: int, sharded_min_n: int, dtype=None,
     _bump_generation()
     if save:
         save_cache(cache)
+
+
+def fastmm_config(dtype=None, backend: Optional[str] = None) -> tuple:
+    """(crossover_n, max_levels, leaf_blocks) for the Strassen route.
+
+    ``leaf_blocks`` is ``None`` unless a sweep recorded explicit leaf tile
+    shapes — ``None`` means the dense leaves pick their own tiles through
+    ``ops.pick_blocks`` (the ``matmul`` namespace). Consults the ``fastmm``
+    cache namespace (dtype-specific entry first, then dtype-agnostic) and
+    falls back to the modeled defaults. Resolution happens outside any jit
+    and is re-memoized by consumers per cache generation, so a retuned
+    crossover reroutes a live engine instead of being silently ignored.
+    """
+    cache = load_cache()
+    for key in (_fastmm_key(dtype, backend), _fastmm_key(None, backend)):
+        entry = cache.get(key)
+        if entry is not None and _valid_entry(entry) and "fastmm" in entry:
+            leaf = entry.get("leaf_blocks")
+            return (int(entry["fastmm"][0]), int(entry["fastmm"][1]),
+                    None if leaf is None else tuple(int(x) for x in leaf))
+    return DEFAULT_FASTMM_CROSSOVER, DEFAULT_FASTMM_LEVELS, None
+
+
+def record_fastmm(crossover_n: int, max_levels: int, leaf_blocks=None,
+                  dtype=None, backend: Optional[str] = None,
+                  measured: bool = False, save: bool = True) -> None:
+    """Store a tuned Strassen config for one dtype/backend.
+
+    ``measured`` records provenance exactly like the block namespaces:
+    hardware sweeps that timed the real dense-vs-Strassen crossover record
+    ``True`` so the modeled defaults can be invalidated wholesale.
+    """
+    if not isinstance(crossover_n, int) or isinstance(crossover_n, bool) \
+            or crossover_n < 1:
+        raise ValueError(f"fastmm crossover must be a positive int, "
+                         f"got {crossover_n!r}")
+    if not isinstance(max_levels, int) or isinstance(max_levels, bool) \
+            or max_levels < 0:
+        raise ValueError(f"fastmm max_levels must be a non-negative int, "
+                         f"got {max_levels!r}")
+    if leaf_blocks is not None:
+        leaf_blocks = [int(x) for x in leaf_blocks]
+        if len(leaf_blocks) != 3 or any(x < 1 for x in leaf_blocks):
+            raise ValueError(f"fastmm leaf_blocks must be three positive "
+                             f"ints, got {leaf_blocks!r}")
+    cache = load_cache()
+    cache[_fastmm_key(dtype, backend)] = {
+        "fastmm": [int(crossover_n), int(max_levels)],
+        "leaf_blocks": leaf_blocks,
+        "measured": bool(measured),
+    }
+    _bump_generation()
+    if save:
+        save_cache(cache)
+
+
+def sweep_fastmm(dtype=jnp.float32, *, backend: Optional[str] = None,
+                 measure: Optional[bool] = None,
+                 candidates: Sequence[int] = (256, 512, 1024),
+                 reps: int = 3, save: bool = True) -> tuple:
+    """Record the Strassen crossover for this backend; returns
+    ``(crossover_n, max_levels)``.
+
+    When measuring (auto on a real TPU backend, forceable anywhere with
+    ``measure=True``), each candidate crossover c is probed at n = 2c —
+    the smallest problem that recurses exactly one level — and the smallest
+    candidate where depth-1 Strassen beats the dense squaring wins.
+    Everywhere else the modeled defaults are recorded as a ``measured:
+    false`` entry so the cache documents the active policy and hardware
+    campaigns know what to invalidate.
+    """
+    if measure is None:
+        measure = jax.default_backend() == "tpu"
+    crossover, levels = DEFAULT_FASTMM_CROSSOVER, DEFAULT_FASTMM_LEVELS
+    if measure:
+        from repro.kernels import fastmm as _fastmm
+        from repro.kernels import ops as kops
+
+        def _best_us(fn, a):
+            jax.block_until_ready(fn(a))
+            best = float("inf")
+            for _ in range(reps):
+                t0 = time.perf_counter()
+                jax.block_until_ready(fn(a))
+                best = min(best, time.perf_counter() - t0)
+            return best * 1e6
+
+        for cand in sorted(int(c) for c in candidates):
+            n = 2 * cand
+            rng = np.random.default_rng(0)
+            a = jnp.asarray(rng.standard_normal((n, n)), dtype)
+            dense_us = _best_us(jax.jit(lambda x: kops.square(x)), a)
+            fast_us = _best_us(
+                jax.jit(lambda x, c=cand: _fastmm.strassen_square(
+                    x, levels=1, crossover=c)), a)
+            if fast_us < dense_us:
+                crossover = cand
+                break
+    if save:
+        record_fastmm(crossover, levels, dtype=dtype, backend=backend,
+                      measured=bool(measure))
+    return crossover, levels
 
 
 def bucket_deadline_ms(op: str, n: int, dtype=None,

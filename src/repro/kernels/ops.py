@@ -300,6 +300,24 @@ def _square_step_ref(a):
     return _ref.matmul_ref(a, a)
 
 
+# Donated Strassen squaring step (the chain's fast=True path, eager calls
+# only — same donation story as _square_step). The whole recursion jits into
+# ONE executable per (shape, config): the 7 sub-products and the combine
+# adds fuse instead of dispatching per leaf.
+@functools.partial(
+    jax.jit,
+    static_argnames=("levels", "crossover", "leaf_blocks", "interpret",
+                     "out_dtype"),
+    donate_argnums=(0,),
+)
+def _fast_square_step(a, *, levels, crossover, leaf_blocks, interpret,
+                      out_dtype):
+    from repro.kernels import fastmm as _fastmm
+    return _fastmm.strassen_square(a, levels=levels, crossover=crossover,
+                                   leaf_blocks=leaf_blocks,
+                                   interpret=interpret, out_dtype=out_dtype)
+
+
 class PaddedChain:
     """Pad-once / unpad-once plumbing shared by the chain executors.
 
@@ -373,10 +391,19 @@ class MatmulChain(PaddedChain):
 
     ``square(x)`` may donate ``x``'s buffer when called eagerly: treat the
     argument as consumed (copy first if you hold another reference to it).
+
+    ``fast`` selects the Strassen route (``kernels.fastmm``): every
+    ``square``/``mm`` recurses per the autotuned ``fastmm`` config
+    (crossover, depth cap, leaf tiles) with the tuned dense kernels as
+    leaves. ``fast=None`` auto-enables it exactly when the chain size
+    exceeds the crossover; the default ``False`` keeps the dense routes'
+    bit-exact contract — Strassen results are tolerance-bounded, not
+    bit-identical (~1 bit per recursion level; see
+    ``fastmm.error_budget``).
     """
 
     def __init__(self, n: int, dtype, *, interpret: bool = False,
-                 blocks=None, donate: bool = True):
+                 blocks=None, donate: bool = True, fast=False):
         super().__init__(n, dtype, donate=donate)
         self.interpret = bool(interpret)
         self.active = self.interpret or pallas_supported()
@@ -389,10 +416,43 @@ class MatmulChain(PaddedChain):
         else:
             self.blocks = None
             self.tiers = None
+        # Strassen config resolved ONCE per chain (like blocks/tiers): the
+        # whole chain recurses identically, so its error budget is a
+        # function of one (crossover, levels) pair.
+        if fast is not False:
+            from repro.kernels import autotune
+            self.fast_config = autotune.fastmm_config(self.dtype)
+            if fast is None:          # auto: only where recursion can win
+                fast = self.padded_n > self.fast_config[0]
+        if fast is False:
+            self.fast_config = None
+        self.fast = bool(fast)
+
+    @property
+    def fast_levels(self) -> int:
+        """Strassen levels each multiply of this chain actually recurses
+        (0 for dense chains) — the ``levels`` input to
+        ``fastmm.error_budget``."""
+        if not self.fast:
+            return 0
+        from repro.kernels import fastmm as _fastmm
+        crossover, levels, _ = self.fast_config
+        return _fastmm.plan_levels(self.padded_n, levels, crossover)
+
+    def _strassen_mm(self, x: jax.Array, y: jax.Array) -> jax.Array:
+        from repro.kernels import fastmm as _fastmm
+        crossover, levels, leaf_blocks = self.fast_config
+        return _fastmm.strassen_matmul(x, y, levels=levels,
+                                       crossover=crossover,
+                                       leaf_blocks=leaf_blocks,
+                                       interpret=self.interpret,
+                                       out_dtype=self.dtype)
 
     # -- chain body (operands already padded) ------------------------------
     def mm(self, x: jax.Array, y: jax.Array) -> jax.Array:
         """x @ y on padded buffers — no pad/unpad, blocks fixed per chain."""
+        if self.fast:
+            return self._strassen_mm(x, y)
         if not self.active:
             return _ref.matmul_ref(x, y, out_dtype=self.dtype)
         if x.ndim > 2 or y.ndim > 2:
@@ -410,6 +470,15 @@ class MatmulChain(PaddedChain):
         fusion/inlining, so traced calls go straight to the kernel.
         """
         eager = not isinstance(x, jax.core.Tracer)
+        if self.fast:
+            if self.donate and eager:
+                crossover, levels, leaf_blocks = self.fast_config
+                return _fast_square_step(x, levels=levels,
+                                         crossover=crossover,
+                                         leaf_blocks=leaf_blocks,
+                                         interpret=self.interpret,
+                                         out_dtype=self.dtype)
+            return self._strassen_mm(x, x)
         if not self.active:
             if self.donate and eager:
                 return _square_step_ref(x)

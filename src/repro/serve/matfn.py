@@ -115,7 +115,10 @@ __all__ = ["MatFnRequest", "MatFnEngine", "MatFnFuture",
 OPS = ("matpow", "expm")
 
 #: Dispatch routes a bucket can take (see :meth:`MatFnEngine.route_for`).
-ROUTES = ("xla", "chain", "sharded")
+#: ``xla``/``chain``/``sharded`` are bit-identical to per-matrix calls of
+#: the same kernels; ``fastmm`` (Strassen recursion above the autotuned
+#: crossover) is tolerance-bounded — see ``kernels.fastmm.error_budget``.
+ROUTES = ("xla", "chain", "sharded", "fastmm")
 
 #: Flush triggers the daemon distinguishes in ``stats["flush_triggers"]``
 #: (``priority`` = a latency-lane request at n >= bypass_n forced its
@@ -466,6 +469,7 @@ class MatFnEngine:
         # cache reroutes the running engine, not just the next one).
         self._thresholds_cache: dict = {}
         self._deadline_cache: dict = {}
+        self._fastmm_cache: dict = {}
         self._pending: List[MatFnRequest] = []
         self._executables: dict = {}
         # Daemon state (inert until start()).
@@ -740,24 +744,45 @@ class MatFnEngine:
         slo_s = self._admission.slo_s_for(lane)
         return delay_s if slo_s is None else min(delay_s, slo_s)
 
+    def fastmm_crossover_for(self, dtype=None) -> int:
+        """The Strassen crossover n for an operand dtype: buckets with
+        n STRICTLY above it take the ``fastmm`` route. Resolved from the
+        tuning cache's ``fastmm`` namespace and memoized per cache
+        generation exactly like the dispatch thresholds — a mid-process
+        retune reroutes the very next bucket."""
+        key = jnp.dtype(dtype).name if dtype is not None else "any"
+        return self._memoized(
+            self._fastmm_cache, key,
+            lambda: autotune.fastmm_config(
+                dtype=None if dtype is None else dtype)[0])
+
     def route_for(self, n: int, batch: int, dtype=None) -> str:
         """Heterogeneous dispatch: which executor serves an (n, batch) bucket.
 
         ``sharded`` (mesh-resident chain) only ever takes single huge
         matrices — the 2-D specs are per-matrix (ROADMAP: batched sharded
         chains are unexplored) — so batched buckets at any n stay on-device
-        local routes.
+        local routes. Huge-n buckets above the autotuned Strassen crossover
+        (and not sharded-eligible) take ``fastmm`` — the only
+        tolerance-bounded route; everything else is bit-identical to
+        per-matrix calls.
         """
         cpu_max_n, sharded_min_n = self.thresholds_for(dtype)
         if self.mesh is not None and batch == 1 and n >= sharded_min_n:
             return "sharded"
         if n <= cpu_max_n:
             return "xla"
+        if n > self.fastmm_crossover_for(dtype):
+            return "fastmm"
         return "chain"
 
     @property
     def _chain_backend(self) -> str:
         return "pallas_chain_interpret" if self.interpret else "pallas_chain"
+
+    @property
+    def _fastmm_backend(self) -> str:
+        return "pallas_fastmm_interpret" if self.interpret else "pallas_fastmm"
 
     # -- executable cache --------------------------------------------------
     def _executable(self, op: str, route: str, padded_batch: int, n: int,
@@ -789,7 +814,9 @@ class MatFnEngine:
             else:
                 exe = lambda x: expm_sharded(x[0], mesh)[None]
         else:
-            backend = self._chain_backend if route == "chain" else "xla"
+            backend = (self._chain_backend if route == "chain"
+                       else self._fastmm_backend if route == "fastmm"
+                       else "xla")
             if op == "matpow":
                 fn = functools.partial(batched_matpow, p=power,
                                        backend=backend)

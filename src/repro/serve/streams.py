@@ -67,7 +67,7 @@ __all__ = ["DEFAULT_ROUTES", "ExecutionStreams", "StreamPool",
 #: Dispatch routes the default stream layout covers, in stream order
 #: (mirrors ``repro.serve.matfn.ROUTES``; duplicated here because matfn
 #: imports this module).
-DEFAULT_ROUTES = ("xla", "chain", "sharded")
+DEFAULT_ROUTES = ("xla", "chain", "sharded", "fastmm")
 
 
 class StreamCrashed(RuntimeError):
@@ -94,10 +94,10 @@ class ExecutionStreams:
                  through a single worker (the PR 6 schedule), and counts
                  above ``len(routes)`` leave the extra workers idle.
     ``routes``   the route names, in stream-assignment order: route ``i``
-                 runs on stream ``i % streams``. With the default triple
+                 runs on stream ``i % streams``. With the default four
                  and ``streams=2``, ``xla`` and ``sharded`` share stream
-                 0 while ``chain`` (the heavy route) gets stream 1 to
-                 itself.
+                 0 while the two heavy chain routes (``chain`` and
+                 ``fastmm``) share stream 1.
     """
 
     streams: int = len(DEFAULT_ROUTES)

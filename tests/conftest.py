@@ -19,8 +19,25 @@ os.environ["REPRO_AUTOTUNE_CACHE"] = os.path.join(_autotune_tmp,
                                                   "autotune.json")
 
 import sys
+from importlib.util import find_spec
 from pathlib import Path
 
 SRC = Path(__file__).resolve().parent.parent / "src"
 if str(SRC) not in sys.path:
     sys.path.insert(0, str(SRC))
+
+
+def pytest_addoption(parser):
+    # pytest-timeout is an optional dependency. When it is absent, the
+    # `timeout` / `timeout_method` keys in pyproject.toml would make every
+    # run emit "Unknown config option" warnings — register them as known
+    # (inert) ini keys ourselves so plugin-less runs stay warning-free.
+    # When the plugin IS installed it registers these first and enforces
+    # them; re-registering would raise, hence the guard.
+    if find_spec("pytest_timeout") is None:
+        parser.addini("timeout",
+                      "per-test timeout in seconds (inert: pytest-timeout "
+                      "is not installed)")
+        parser.addini("timeout_method",
+                      "timeout enforcement method (inert: pytest-timeout "
+                      "is not installed)")

@@ -18,7 +18,15 @@ ALGEBRA over random ``n in [1, 97]`` and ``p in [0, 32]``:
   * admission-control shedding never corrupts survivors: at ANY
     (capacity, load, policy), every served answer is bit-identical to
     its per-matrix jitted reference and serve/shed counts account for
-    every submit exactly.
+    every submit exactly;
+  * the Strassen route stays inside ``fastmm.error_budget`` at ANY
+    (n, depth) — the tolerance-bounded half of the accuracy contract,
+    next to the dense routes' bit-identity half.
+
+Every comparison goes through ``tests/_tolerance.py`` — bit-exact routes
+via ``assert_bit_identical``, tolerance-bounded ones via
+``assert_within_budget`` — so the budgets live in one place
+(``kernels.fastmm``) instead of per-test rtol literals.
 
 Operands are normalized to spectral norm 0.9 so powers up to 32 stay
 well-scaled (no overflow at n=1, no underflow-to-atol at n=97) and the
@@ -33,10 +41,12 @@ import jax
 import jax.numpy as jnp
 
 from _hypothesis_compat import given, settings, strategies as st
+from _tolerance import (assert_bit_identical, assert_within_budget,
+                        matpow_mults)
 
 from repro.core import (batched_matpow, matpow_binary, matpow_binary_traced,
                         matpow_naive)
-from repro.kernels import ops
+from repro.kernels import fastmm, ops
 from repro.serve.admission import AdmissionControl, POLICIES, ShedError
 from repro.serve.matfn import MatFnEngine
 from repro.serve.scheduler import ManualClock
@@ -68,27 +78,25 @@ class TestImplementationAgreement:
         """Same squaring/combine sequence => same bits, any (n, p)."""
         a = _mat(n, seed=n * 131 + p)
         want = np.asarray(matpow_binary(a, p))
-        np.testing.assert_array_equal(
-            np.asarray(matpow_binary_traced(a, jnp.int32(p))), want)
-        np.testing.assert_array_equal(
-            np.asarray(batched_matpow(a[None], p)[0]), want)
+        assert_bit_identical(matpow_binary_traced(a, jnp.int32(p)), want)
+        assert_bit_identical(batched_matpow(a[None], p)[0], want)
 
     @settings(max_examples=MAX_EXAMPLES, deadline=None)
     @given(N_RANGE, P_RANGE)
     def test_binary_matches_f64_reference_f32(self, n, p):
         a = _mat(n, seed=n * 59 + p)
-        np.testing.assert_allclose(np.asarray(matpow_binary(a, p)),
-                                   _ref_pow(a, p), rtol=2e-3, atol=1e-5)
+        assert_within_budget(matpow_binary(a, p), _ref_pow(a, p), n=n)
 
     @settings(max_examples=MAX_EXAMPLES, deadline=None)
     @given(N_RANGE, st.integers(min_value=0, max_value=16))
     def test_naive_agrees_with_binary_f32(self, n, p):
-        """Different multiply orders, same math to fp tolerance (p capped
-        at 16: the naive loop is O(p) sequential multiplies)."""
+        """Different multiply orders, same math to the dense (level-0)
+        budget (p capped at 16: the naive loop is O(p) sequential
+        multiplies)."""
         a = _mat(n, seed=n * 17 + p)
-        np.testing.assert_allclose(np.asarray(matpow_naive(a, p)),
-                                   np.asarray(matpow_binary(a, p)),
-                                   rtol=2e-3, atol=1e-5)
+        assert_within_budget(matpow_naive(a, p),
+                             np.asarray(matpow_binary(a, p), np.float64),
+                             n=n)
 
     @settings(max_examples=MAX_EXAMPLES, deadline=None)
     @given(N_RANGE, P_RANGE)
@@ -99,10 +107,8 @@ class TestImplementationAgreement:
         a = _mat(n, seed=n * 31 + p, dtype=jnp.bfloat16)
         got = matpow_binary(a, p)
         assert got.dtype == jnp.bfloat16
-        np.testing.assert_array_equal(
-            np.float32(batched_matpow(a[None], p)[0]), np.float32(got))
-        np.testing.assert_allclose(np.float32(got), _ref_pow(a, p),
-                                   rtol=0.15, atol=0.05)
+        assert_bit_identical(batched_matpow(a[None], p)[0], got)
+        assert_within_budget(got, _ref_pow(a, p), dtype=jnp.bfloat16, n=n)
 
 
 class TestChainBackendProperties:
@@ -113,9 +119,9 @@ class TestChainBackendProperties:
         """The fused chain (interpret mode) matches the XLA path at any
         (n, p) — including sizes that force real padding."""
         a = _mat(n, seed=n * 7 + p)
-        np.testing.assert_allclose(
-            np.asarray(matpow_binary(a, p, backend=CHAIN)),
-            np.asarray(matpow_binary(a, p)), rtol=2e-3, atol=1e-5)
+        assert_within_budget(matpow_binary(a, p, backend=CHAIN),
+                             np.asarray(matpow_binary(a, p), np.float64),
+                             n=n)
 
     @settings(max_examples=MAX_EXAMPLES, deadline=None)
     @given(st.integers(min_value=1, max_value=97),
@@ -172,9 +178,51 @@ class TestStackedVsPerMatrix:
         stack = jnp.asarray(stack)
         got = np.asarray(batched_matpow(stack, p, backend=CHAIN))
         for i in range(b):
-            np.testing.assert_array_equal(
-                got[i], np.asarray(matpow_binary(stack[i], p,
-                                                 backend=CHAIN)))
+            assert_bit_identical(
+                got[i], matpow_binary(stack[i], p, backend=CHAIN))
+
+
+class TestStrassenErrorBounds:
+    """The tolerance-bounded half of the accuracy contract as properties:
+    at ANY (n, depth) the Strassen route lands inside
+    ``fastmm.error_budget`` for the depth it ACTUALLY recursed, and
+    depth 0 degenerates to the bit-exact dense leaf."""
+
+    @settings(max_examples=MAX_EXAMPLES, deadline=None)
+    @given(st.integers(min_value=1, max_value=257),
+           st.integers(min_value=0, max_value=3))
+    def test_strassen_square_within_budget_any_depth(self, n, depth):
+        a = _mat(n, seed=n * 43 + depth)
+        got = fastmm.strassen_square(a, levels=depth, crossover=8)
+        used = fastmm.plan_levels(n, levels=depth, crossover=8)
+        assert used <= depth
+        a64 = np.asarray(a, np.float64)
+        assert_within_budget(got, a64 @ a64, levels=used, n=n)
+
+    @settings(max_examples=MAX_EXAMPLES, deadline=None)
+    @given(st.integers(min_value=1, max_value=257))
+    def test_depth_zero_is_the_dense_leaf_bit_identical(self, n):
+        """levels=0 (or n at/below the crossover) must be the SAME dense
+        multiply, not merely a close one — the fall-through contract."""
+        a = _mat(n, seed=n * 101)
+        assert_bit_identical(
+            fastmm.strassen_square(a, levels=0, crossover=8),
+            fastmm.strassen_square(a, levels=3, crossover=max(n, 8)))
+
+    @settings(max_examples=MAX_EXAMPLES, deadline=None)
+    @given(st.integers(min_value=2, max_value=129),
+           st.integers(min_value=1, max_value=4))
+    def test_strassen_squaring_chain_within_budget(self, n, k):
+        """A whole squaring chain (A^(2^k), every multiply on the Strassen
+        route) stays inside the budget scaled by its multiply count —
+        the matpow-shaped error-accumulation property."""
+        a = _mat(n, seed=n * 11 + k)
+        x = a
+        for _ in range(k):
+            x = fastmm.strassen_square(x, levels=2, crossover=8)
+        used = fastmm.plan_levels(n, levels=2, crossover=8)
+        assert_within_budget(x, _ref_pow(a, 2 ** k), levels=used, n=n,
+                             mults=k)
 
 
 _POW_REFS = {}
@@ -230,8 +278,7 @@ class TestShedNeverCorruptsSurvivors:
                 continue
             assert exc is None
             served += 1
-            np.testing.assert_array_equal(np.asarray(fut.result()),
-                                          np.asarray(_jit_pow(p)(a)))
+            assert_bit_identical(fut.result(), _jit_pow(p)(a))
         assert served == min(total, cap)
         assert snap["lanes"]["bulk"]["shed"] == total - served
         assert raised + sum(

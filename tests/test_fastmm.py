@@ -1,0 +1,265 @@
+"""Strassen fast-matmul route (kernels.fastmm): recursion correctness at
+awkward sizes, depth-cap / crossover policy, autotune namespace round-trip +
+corruption recovery, engine dispatch, and the PR's acceptance gate (matpow
+via fastmm within the documented error budget at n in {96, 200, 509} while
+the dense routes stay bit-identical)."""
+
+import json
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from _tolerance import (assert_bit_identical, assert_within_budget,
+                        matpow_mults, strassen_budget)
+
+from repro.core import batched_matpow, matpow_binary, matpow_binary_traced
+from repro.kernels import autotune, fastmm, ops
+from repro.serve.matfn import ROUTES, MatFnEngine
+
+pytestmark = pytest.mark.timeout(120)
+
+
+@pytest.fixture
+def tmp_cache(tmp_path, monkeypatch):
+    path = tmp_path / "autotune.json"
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(path))
+    autotune.clear_memory_cache()
+    yield path
+    autotune.clear_memory_cache()
+
+
+def _mat(n, seed, dtype=jnp.float32):
+    rng = np.random.default_rng(seed)
+    a = rng.standard_normal((n, n))
+    a = a / max(np.linalg.norm(a, 2), 1e-12) * 0.9
+    return jnp.asarray(a, dtype)
+
+
+class TestStrassenCorrectness:
+    @pytest.mark.parametrize("n", [3, 7, 13, 97, 101])
+    def test_matches_reference_at_odd_and_prime_n_f32(self, n):
+        """Full-depth recursion through odd sub-sizes (every level pads one
+        row/col) still lands inside the per-level error budget."""
+        a, b = _mat(n, seed=n), _mat(n, seed=n + 1)
+        got = fastmm.strassen_matmul(a, b, levels=3, crossover=2)
+        want = np.asarray(a, np.float64) @ np.asarray(b, np.float64)
+        levels = fastmm.plan_levels(n, levels=3, crossover=2)
+        assert got.dtype == a.dtype
+        assert_within_budget(got, want, levels=levels, n=n)
+
+    @pytest.mark.parametrize("n", [7, 53, 96])
+    def test_matches_reference_bf16(self, n):
+        a, b = _mat(n, seed=n, dtype=jnp.bfloat16), _mat(
+            n, seed=n + 9, dtype=jnp.bfloat16)
+        got = fastmm.strassen_matmul(a, b, levels=2, crossover=4)
+        want = np.float32(a).astype(np.float64) @ np.float32(b).astype(
+            np.float64)
+        assert got.dtype == jnp.bfloat16
+        assert_within_budget(got, want,
+                             levels=fastmm.plan_levels(n, 2, 4), n=n)
+
+    def test_batched_operands_carry_through(self):
+        """Leading batch dims ride the quadrant slicing untouched."""
+        rng = np.random.default_rng(3)
+        stack = jnp.asarray(rng.standard_normal((4, 10, 10)) * 0.3,
+                            jnp.float32)
+        got = np.asarray(fastmm.strassen_square(stack, levels=2, crossover=2))
+        for i in range(4):
+            want = np.asarray(stack[i], np.float64)
+            assert_within_budget(got[i], want @ want, levels=2, n=10)
+
+    def test_rejects_non_square_or_mismatched(self):
+        with pytest.raises(ValueError):
+            fastmm.strassen_matmul(jnp.zeros((4, 6)), jnp.zeros((4, 6)))
+        with pytest.raises(ValueError):
+            fastmm.strassen_matmul(jnp.zeros((4, 4)), jnp.zeros((8, 8)))
+
+
+class TestRecursionPolicy:
+    def _counting_leaf(self, calls):
+        def leaf(a, b):
+            calls.append(a.shape[-1])
+            return jnp.matmul(a, b)
+        return leaf
+
+    def test_depth_cap_bounds_leaf_fanout(self):
+        """levels=L does exactly 7^L leaf multiplies (n far above the
+        crossover) — the depth cap, not n, stops the recursion."""
+        a = _mat(16, seed=0)
+        for levels, want in ((0, 1), (1, 7), (2, 49)):
+            calls = []
+            fastmm.strassen_matmul(a, a, levels=levels, crossover=1,
+                                   leaf=self._counting_leaf(calls))
+            assert len(calls) == want
+
+    def test_crossover_fall_through_is_one_dense_call(self):
+        """n <= crossover: exactly one leaf call on the UNTOUCHED operands
+        — the fast route degenerates to the dense kernel below crossover."""
+        a, b = _mat(48, seed=1), _mat(48, seed=2)
+        calls = []
+        got = fastmm.strassen_matmul(a, b, levels=3, crossover=48,
+                                     leaf=self._counting_leaf(calls))
+        assert calls == [48]
+        assert_bit_identical(got, jnp.matmul(a, b))
+
+    def test_plan_levels_mirrors_recursion(self):
+        assert fastmm.plan_levels(509, levels=2, crossover=64) == 2
+        assert fastmm.plan_levels(509, levels=5, crossover=64) == 3
+        assert fastmm.plan_levels(64, levels=2, crossover=64) == 0
+        assert fastmm.plan_levels(1, levels=4, crossover=1) == 0
+        # Odd sizes halve via (n+1)//2 — same as the recursion's padding.
+        assert fastmm.plan_levels(129, levels=3, crossover=33) == 2
+
+    def test_error_budget_scales_per_level(self):
+        r0, a0 = fastmm.error_budget(jnp.float32, levels=0)
+        r2, a2 = fastmm.error_budget(jnp.float32, levels=2)
+        assert (r2, a2) == (4 * r0, 4 * a0)
+        assert fastmm.error_budget(jnp.float32)[0] == \
+            fastmm.DENSE_BUDGET["float32"][0]
+
+
+class TestAutotuneFastmm:
+    def test_round_trip_and_reload(self, tmp_cache):
+        autotune.record_fastmm(384, 1, leaf_blocks=(128, 128, 128),
+                               dtype=jnp.float32)
+        assert autotune.fastmm_config(jnp.float32) == (384, 1,
+                                                       (128, 128, 128))
+        autotune.clear_memory_cache()    # force re-read from disk
+        assert autotune.fastmm_config(jnp.float32) == (384, 1,
+                                                       (128, 128, 128))
+
+    def test_dtype_agnostic_fallback_and_miss_defaults(self, tmp_cache):
+        assert autotune.fastmm_config(jnp.float32) == (
+            autotune.DEFAULT_FASTMM_CROSSOVER,
+            autotune.DEFAULT_FASTMM_LEVELS, None)
+        autotune.record_fastmm(256, 3, dtype=None)
+        assert autotune.fastmm_config(jnp.bfloat16) == (256, 3, None)
+
+    def test_corrupted_file_degrades_to_defaults(self, tmp_cache):
+        tmp_cache.write_text("{this is not json")
+        with pytest.warns(UserWarning, match="corrupted autotune cache"):
+            assert autotune.fastmm_config(jnp.float32) == (
+                autotune.DEFAULT_FASTMM_CROSSOVER,
+                autotune.DEFAULT_FASTMM_LEVELS, None)
+
+    def test_record_repairs_corrupted_file(self, tmp_cache):
+        tmp_cache.write_text("[1, 2, 3]")
+        with pytest.warns(UserWarning, match="corrupted autotune cache"):
+            autotune.record_fastmm(512, 2, dtype=jnp.float32)
+        autotune.clear_memory_cache()
+        assert autotune.fastmm_config(jnp.float32) == (512, 2, None)
+        assert isinstance(json.loads(tmp_cache.read_text()), dict)
+
+    def test_invalid_entries_filtered(self, tmp_cache):
+        key = autotune._fastmm_key(jnp.float32)
+        tmp_cache.write_text(json.dumps({
+            key: {"fastmm": [0, -1], "measured": False},
+        }))
+        assert autotune.fastmm_config(jnp.float32) == (
+            autotune.DEFAULT_FASTMM_CROSSOVER,
+            autotune.DEFAULT_FASTMM_LEVELS, None)
+
+    def test_record_validates_arguments(self, tmp_cache):
+        with pytest.raises(ValueError):
+            autotune.record_fastmm(0, 1)
+        with pytest.raises(ValueError):
+            autotune.record_fastmm(128, -1)
+        with pytest.raises(ValueError):
+            autotune.record_fastmm(128, 1, leaf_blocks=(128, 128))
+
+    def test_record_bumps_cache_generation(self, tmp_cache):
+        gen = autotune.cache_generation()
+        autotune.record_fastmm(256, 2)
+        assert autotune.cache_generation() > gen
+
+    def test_modeled_sweep_records_provenance(self, tmp_cache):
+        got = autotune.sweep_fastmm(jnp.float32, measure=False)
+        assert got == (autotune.DEFAULT_FASTMM_CROSSOVER,
+                       autotune.DEFAULT_FASTMM_LEVELS)
+        entry = json.loads(tmp_cache.read_text())[
+            autotune._fastmm_key(jnp.float32)]
+        assert entry["measured"] is False
+
+
+class TestChainFastPath:
+    def test_fast_false_is_the_default_and_dense(self, tmp_cache):
+        chain = ops.MatmulChain(96, jnp.float32, interpret=True)
+        assert chain.fast is False and chain.fast_levels == 0
+
+    def test_fast_auto_follows_crossover(self, tmp_cache):
+        """fast=None compares the chain's PADDED size (the buffer the
+        squarings actually run on) against the autotuned crossover."""
+        autotune.record_fastmm(64, 2, dtype=jnp.float32)
+        chain = ops.MatmulChain(96, jnp.float32, interpret=True, fast=None)
+        assert chain.padded_n > 64 and chain.fast is True
+        autotune.record_fastmm(512, 2, dtype=jnp.float32)
+        chain = ops.MatmulChain(96, jnp.float32, interpret=True, fast=None)
+        assert chain.padded_n <= 512 and chain.fast is False
+
+    def test_fast_chain_square_within_budget(self, tmp_cache):
+        autotune.record_fastmm(16, 2, dtype=jnp.float32)
+        chain = ops.MatmulChain(96, jnp.float32, fast=True)
+        a = _mat(96, seed=4)
+        got = chain.unpad(chain.square(chain.pad(a)))
+        want = np.asarray(a, np.float64)
+        assert_within_budget(got, want @ want, levels=chain.fast_levels,
+                             n=96)
+
+
+class TestEngineDispatch:
+    def test_huge_n_bucket_takes_fastmm_route(self, tmp_cache):
+        assert ROUTES == ("xla", "chain", "sharded", "fastmm")
+        autotune.record_fastmm(128, 2)
+        eng = MatFnEngine()
+        assert eng.route_for(16, 1) == "xla"
+        assert eng.route_for(96, 1) == "chain"      # above xla, below crossover
+        assert eng.route_for(200, 1) == "fastmm"    # above crossover
+        assert eng.route_for(200, 4) == "fastmm"    # batched buckets too
+
+    def test_mid_process_retune_reroutes(self, tmp_cache):
+        eng = MatFnEngine()
+        assert eng.route_for(200, 1) == "chain"     # default crossover 1024
+        autotune.record_fastmm(128, 2)              # bumps the generation
+        assert eng.route_for(200, 1) == "fastmm"
+
+    def test_fastmm_bucket_executes_within_budget(self, tmp_cache):
+        autotune.record_fastmm(64, 2)
+        eng = MatFnEngine()
+        a = _mat(200, seed=7)
+        p = 5
+        idx = eng.submit("matpow", a, power=p)
+        outs = eng.flush()
+        assert eng.stats["routes"]["fastmm"] == 1
+        assert_within_budget(
+            outs[idx], np.linalg.matrix_power(np.asarray(a, np.float64), p),
+            levels=2, n=200, mults=matpow_mults(p))
+
+
+class TestAcceptance:
+    """ISSUE 8 acceptance: matpow via the fastmm route within the documented
+    levels*eps budget at n in {96, 200, 509}, depth <= 2, while every
+    pre-existing dense route stays bit-identical to its per-matrix twin."""
+
+    @pytest.mark.parametrize("n", [96, 200, 509])
+    def test_fastmm_within_budget_dense_bit_identical(self, tmp_cache, n):
+        autotune.record_fastmm(64, 2)   # Strassen engages at every n, depth<=2
+        p = 7                           # 2 squarings + 2 combines
+        a = _mat(n, seed=n * 3 + 1)
+        ref64 = np.linalg.matrix_power(np.asarray(a, np.float64), p)
+
+        got_fast = matpow_binary(a, p, backend="pallas_fastmm")
+        rtol, atol = strassen_budget(jnp.float32, levels=2, n=n,
+                                     mults=matpow_mults(p))
+        np.testing.assert_allclose(np.asarray(got_fast), ref64,
+                                   rtol=rtol, atol=atol)
+
+        # Dense routes: unaffected by the recorded fastmm config, and the
+        # same-math implementations still agree bit for bit.
+        want = matpow_binary(a, p)
+        assert_bit_identical(matpow_binary_traced(a, jnp.int32(p)), want)
+        assert_bit_identical(batched_matpow(a[None], p)[0], want)
+        want_chain = matpow_binary(a, p, backend="pallas_chain")
+        assert_bit_identical(
+            batched_matpow(a[None], p, backend="pallas_chain")[0],
+            want_chain)

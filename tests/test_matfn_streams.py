@@ -35,6 +35,8 @@ import pytest
 import jax
 import jax.numpy as jnp
 
+from _tolerance import assert_within_budget, matpow_mults
+
 from repro.core import expm, matpow_binary
 from repro.kernels import autotune
 from repro.serve.admission import AdmissionControl
@@ -116,26 +118,29 @@ class _Wedge:
 class TestExecutionStreamsConfig:
     def test_default_one_stream_per_route(self):
         cfg = ExecutionStreams()
-        assert cfg.streams == 3
-        assert cfg.routes == ("xla", "chain", "sharded")
-        assert [cfg.stream_for(r) for r in cfg.routes] == [0, 1, 2]
+        assert cfg.streams == 4
+        assert cfg.routes == ("xla", "chain", "sharded", "fastmm")
+        assert [cfg.stream_for(r) for r in cfg.routes] == [0, 1, 2, 3]
         assert cfg.routes_for(1) == ("chain",)
         assert "chain" in cfg.label(1)
+        assert "fastmm" in cfg.label(3)
 
     def test_streams_fold_onto_workers(self):
         cfg = ExecutionStreams(streams=2)
-        # xla and sharded share stream 0; chain (the heavy route) gets
-        # stream 1 to itself.
+        # xla and sharded share stream 0; the two heavy chain routes
+        # (chain and fastmm) share stream 1.
         assert cfg.stream_for("xla") == 0
         assert cfg.stream_for("chain") == 1
         assert cfg.stream_for("sharded") == 0
+        assert cfg.stream_for("fastmm") == 1
         assert cfg.routes_for(0) == ("xla", "sharded")
+        assert cfg.routes_for(1) == ("chain", "fastmm")
         one = ExecutionStreams(streams=1)
         assert {one.stream_for(r) for r in one.routes} == {0}
         # extra streams beyond the routes idle
-        wide = ExecutionStreams(streams=5)
-        assert wide.routes_for(4) == ()
-        assert "idle" in wide.label(4)
+        wide = ExecutionStreams(streams=6)
+        assert wide.routes_for(5) == ()
+        assert "idle" in wide.label(5)
 
     @pytest.mark.parametrize("bad", [0, -1, True, 1.5, "2"])
     def test_rejects_bad_stream_counts(self, bad):
@@ -153,6 +158,10 @@ class TestExecutionStreamsConfig:
     def test_engine_requires_route_coverage(self, tmp_cache):
         with pytest.raises(ValueError, match="missing"):
             MatFnEngine(streams=ExecutionStreams(routes=("xla", "chain")))
+        # all three dense routes but no fastmm: still not enough
+        with pytest.raises(ValueError, match="missing"):
+            MatFnEngine(streams=ExecutionStreams(
+                routes=("xla", "chain", "sharded")))
 
     def test_dispatch_to_crashed_stream_raises(self):
         entered, gate = threading.Event(), threading.Event()
@@ -283,6 +292,94 @@ class TestStreamOverlap:
             # wedged first; then the latency bucket — queued last but
             # inserted ahead of both waiting bulk buckets
             assert order == [8, 32, 16, 24]
+
+
+class TestFastmmStream:
+    """ISSUE 8: the fourth route gets the same isolation guarantees as the
+    first three — a wedged fastmm bucket must not block xla or chain
+    flushes, and fastmm traffic stays stream-count invariant WITHIN the
+    route's tolerance gate (its answers are tolerance-bounded, so the
+    oracle comparison goes through ``_tolerance``, not bit-identity —
+    but across stream counts the identical executable must still produce
+    identical bits)."""
+
+    def test_wedged_fastmm_does_not_block_xla_or_chain(self, tmp_cache):
+        autotune.record_fastmm(128, 2)     # n=200 -> fastmm; 96 stays chain
+        clock = ManualClock()
+        eng = _engine(clock)
+        wedge = _Wedge(eng, ns={200})
+        with eng:
+            a200 = _mat(200, seed=5)
+            fut_fast = eng.submit("matpow", a200, power=3)
+            clock.advance(10.0)            # fastmm deadline fires
+            assert wedge.entered.wait(TIMEOUT)
+            # fastmm stream wedged mid-execution; BOTH dense streams must
+            # still flow end to end, bit-identical to their oracles
+            a16, a96 = _mat(16, seed=6), _mat(96, seed=7)
+            fut_xla = eng.submit("matpow", a16, power=3)
+            fut_chain = eng.submit("matpow", a96, power=3)
+            clock.advance(10.0)
+            assert np.array_equal(
+                np.asarray(fut_xla.result(timeout=TIMEOUT)),
+                np.asarray(_ref("matpow", a16, 3)))
+            assert np.array_equal(
+                np.asarray(fut_chain.result(timeout=TIMEOUT)),
+                np.asarray(_ref("matpow", a96, 3)))
+            assert not fut_fast.done()
+            snap = eng.stats()
+            # the wedge holds the fastmm bucket BEFORE the chunk core, so
+            # only the two dense routes have counted yet
+            assert snap["routes"] == {"xla": 1, "chain": 1, "sharded": 0,
+                                      "fastmm": 0}
+            assert snap["peak_concurrent_streams"] >= 2
+            wedge.gate.set()
+            got = fut_fast.result(timeout=TIMEOUT)
+            assert eng.stats()["routes"]["fastmm"] == 1
+            # the wedged route's own answer: tolerance gate, not identity
+            assert_within_budget(
+                got, np.linalg.matrix_power(np.asarray(a200, np.float64), 3),
+                levels=2, n=200, mults=matpow_mults(3))
+
+    @staticmethod
+    def _serve(trace, n_streams):
+        clock = ManualClock()
+        eng = _engine(clock, streams=ExecutionStreams(streams=n_streams))
+        with eng:
+            futs = [eng.submit(op, a, power=p) for op, a, p in trace]
+            clock.advance(10.0)
+            eng.settle(timeout=TIMEOUT)
+            outs = [np.asarray(jax.block_until_ready(
+                f.result(timeout=TIMEOUT))) for f in futs]
+            snap = eng.stats()
+        return outs, snap
+
+    def test_streams_1_2_4_invariant_within_tolerance_gate(self, tmp_cache):
+        autotune.record_fastmm(128, 2)
+        rng = np.random.default_rng(11)
+        trace = [("matpow", _mat(int(rng.choice([16, 96, 200])),
+                                 seed=2000 + i), int(rng.integers(1, 4)))
+                 for i in range(12)]
+        runs = {k: self._serve(trace, k) for k in (1, 2, 4)}
+        base_outs, base_snap = runs[1]
+        assert base_snap["routes"]["fastmm"] > 0
+
+        # streams=1 vs the f64 oracle: dense sizes on the dense (level-0)
+        # budget, fastmm sizes on the Strassen budget for its depth
+        for out, (op, a, p) in zip(base_outs, trace):
+            n = a.shape[0]
+            levels = 2 if n > 128 else 0
+            assert_within_budget(
+                out, np.linalg.matrix_power(np.asarray(a, np.float64), p),
+                levels=levels, n=n, mults=matpow_mults(p))
+
+        # across stream counts: same routing accounting, same bits —
+        # streams change the schedule, never the math, fastmm included
+        for k in (2, 4):
+            outs, snap = runs[k]
+            assert snap["routes"] == base_snap["routes"]
+            for i, (o, b) in enumerate(zip(outs, base_outs)):
+                assert np.array_equal(o, b), \
+                    f"fastmm trace diverged at streams={k}, request {i}"
 
 
 class TestStreamCountInvariance:

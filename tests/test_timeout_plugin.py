@@ -1,0 +1,38 @@
+"""Regression checks for the per-test timeout wiring (ISSUE 8 satellite).
+
+PR 7 shipped `timeout` ini options that were silently inert: the plugin
+was never active in CI and plugin-less local runs emitted two "Unknown
+config option" warnings per invocation. These tests pin the fix from both
+sides:
+
+  * everywhere: the `timeout` ini key is REGISTERED (by pytest-timeout
+    when installed, by tests/conftest.py's guard otherwise), so reading it
+    never raises and the warnings are structurally impossible;
+  * in CI (`REPRO_REQUIRE_TIMEOUT_PLUGIN=1`): pytest-timeout must actually
+    be installed and active with the configured 120 s budget — a future
+    requirements/workflow regression fails the suite instead of silently
+    reverting to unbounded hangs.
+"""
+
+import os
+
+import pytest
+
+
+def test_timeout_ini_key_registered_everywhere(pytestconfig):
+    # getini raises ValueError for unregistered keys; a registered-but-inert
+    # key (plugin absent) returns the configured string, the plugin parses
+    # it to a float. Either way the pyproject value must survive to here.
+    value = pytestconfig.getini("timeout")
+    assert float(value) == 120.0
+    assert str(pytestconfig.getini("timeout_method")) == "thread"
+
+
+@pytest.mark.skipif(
+    not os.environ.get("REPRO_REQUIRE_TIMEOUT_PLUGIN"),
+    reason="plugin enforcement only asserted where CI installs it")
+def test_timeout_plugin_is_active(pytestconfig):
+    """CI exports REPRO_REQUIRE_TIMEOUT_PLUGIN=1: the plugin must be
+    genuinely enforcing, not merely installed."""
+    assert pytestconfig.pluginmanager.hasplugin("timeout"), \
+        "pytest-timeout is not active despite REPRO_REQUIRE_TIMEOUT_PLUGIN"
