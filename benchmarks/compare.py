@@ -120,6 +120,17 @@ SPECS = {
         # is the starvation regression this trace exists to catch.
         Metric("overload.cold_p95_over_hot_p95", "lower", 1.5),
         Metric("overload.tenants.cold.served", "higher", 0.8),
+        # Telemetry: the overload run records with tracing ON, and every
+        # submitted request must still end in exactly one terminal
+        # request span (completeness is a property of the wiring, not
+        # the machine — it must never flip). Stage fractions drift with
+        # host speed, so they get wide bands; the execute fraction
+        # collapsing toward zero means the breakdown stopped measuring
+        # the device stage.
+        Metric("overload.trace.complete", "equal"),
+        Metric("overload.trace.dropped", "lower", 0.0),
+        Metric("overload.stages.execute.fraction", "higher", 0.8),
+        Metric("overload.stages.queue.fraction", "lower", 3.0),
     ],
     "BENCH_fastmm.json": [
         # The Strassen route's reason to exist: its speedup over the tuned

@@ -437,14 +437,27 @@ def bench_overload_shedding(*, quick=False, seed=0, hot_tenants=2):
     cold_arrivals = [(j + 0.5) * window / n_cold for j in range(n_cold)]
     cold_rate = n_cold / window
 
+    # trace=True: the overload run doubles as the tracing-overhead gate —
+    # the bit-identity and shed/latency assertions below must hold WITH
+    # request-lifecycle tracing on, and the exported span counts feed the
+    # trace-completeness row CI gates.
     eng = MatFnEngine(
         max_batch=max_batch, max_delay_ms=max_delay_ms,
         thresholds=autotune.DEFAULT_DISPATCH_THRESHOLDS,
         admission=AdmissionControl(capacity=capacity, policy=RejectNewest(),
-                                   slo_ms=slo_ms, bypass_n=bypass_n))
+                                   slo_ms=slo_ms, bypass_n=bypass_n),
+        trace=True)
     eng.start()
     for n in (*hot_sizes, cold_size):
         eng.warm("matpow", n, power=power)
+    # Post-warm stage baseline: warm chunks run the same _run_chunk core
+    # and would otherwise dominate the stage breakdown with compile time;
+    # the reported fractions cover the traced window only.
+    _STAGES = ("queue", "assemble", "execute", "resolve")
+    stage_base = {}
+    for s in _STAGES:
+        h = eng.metrics.merged("stage", stage=s)
+        stage_base[s] = (h.count, h.sum)
     # Default 5 ms GIL switch interval convoys the scheduler behind the
     # full-tilt generator thread (each boundary crossing inside a flush
     # can stall a whole quantum, stretching a 1 ms flush past 20 ms);
@@ -476,7 +489,8 @@ def bench_overload_shedding(*, quick=False, seed=0, hot_tenants=2):
             outs[f"hot-{p}"] = run_open_loop(
                 eng, [hot_workload[i] for i in idx], rate / hot_tenants,
                 lanes=[hot_lanes[i] for i in idx],
-                arrivals=[hot_arrivals[i] for i in idx])
+                arrivals=[hot_arrivals[i] for i in idx],
+                tenants=[f"hot-{p}"] * len(idx))
         except BaseException as exc:      # surface on the caller thread
             errors.append(exc)
 
@@ -484,7 +498,8 @@ def bench_overload_shedding(*, quick=False, seed=0, hot_tenants=2):
         try:
             outs["cold"] = run_open_loop(
                 eng, cold_workload, cold_rate,
-                lanes=["bulk"] * n_cold, arrivals=cold_arrivals)
+                lanes=["bulk"] * n_cold, arrivals=cold_arrivals,
+                tenants=["cold"] * n_cold)
         except BaseException as exc:
             errors.append(exc)
 
@@ -522,6 +537,40 @@ def bench_overload_shedding(*, quick=False, seed=0, hot_tenants=2):
                       for name in tenant_names)
     achieved_rps = n_requests / submit_wall
     drain_rps = served / submit_wall
+
+    # -- stage breakdown (post-warm deltas over the traced window) --------
+    stages = {}
+    total_stage_s = 0.0
+    for s in _STAGES:
+        h = eng.metrics.merged("stage", stage=s)
+        c0, s0 = stage_base[s]
+        d_sum = max(h.sum - s0, 0.0)
+        stages[s] = {"count": h.count - c0, "sum_s": round(d_sum, 6)}
+        total_stage_s += d_sum
+    for row in stages.values():
+        row["fraction"] = (round(row["sum_s"] / total_stage_s, 4)
+                           if total_stage_s > 0 else None)
+
+    # -- trace completeness (every request ends in ONE terminal span) -----
+    tr = eng.tracer
+    req_spans = [s for s in tr.spans() if s["name"] == "request"]
+    outcomes: dict = {}
+    for s in req_spans:
+        o = s["args"]["outcome"]
+        outcomes[o] = outcomes.get(o, 0) + 1
+    trace_info = {
+        "spans": len(tr),
+        "dropped": tr.dropped,
+        "request_spans": len(req_spans),
+        "outcomes": outcomes,
+        # Complete: nothing evicted from the ring, one terminal request
+        # span per submitted request, outcome totals exactly matching the
+        # engine's served/shed accounting.
+        "complete": bool(tr.dropped == 0
+                         and len(req_spans) == n_requests
+                         and outcomes.get("resolved", 0) == served
+                         and outcomes.get("shed", 0) == shed),
+    }
     bit_identical = all(
         np.array_equal(np.asarray(r), ref)
         for r, ref in zip(hot_results + list(outs["cold"][0]),
@@ -619,6 +668,8 @@ def bench_overload_shedding(*, quick=False, seed=0, hot_tenants=2):
         "flush_triggers": snap["flush_triggers"],
         "stragglers": snap["stragglers"],
         "retries": snap["retries"],
+        "stages": stages,
+        "trace": trace_info,
     }
 
 

@@ -65,7 +65,8 @@ def run_workload(engine: MatFnEngine, workload):
 
 
 def run_open_loop(engine: MatFnEngine, workload, rate: float, *,
-                  timeout: float = 120.0, lanes=None, arrivals=None):
+                  timeout: float = 120.0, lanes=None, arrivals=None,
+                  tenants=None):
     """Open-loop traffic against a STARTED daemon engine.
 
     Requests are submitted at their scheduled arrival times ``i / rate``
@@ -74,7 +75,10 @@ def run_open_loop(engine: MatFnEngine, workload, rate: float, *,
     without bound but continuous batching keeps up). ``arrivals`` overrides
     the uniform schedule with explicit per-request offsets in seconds from
     the start (bursty traces); ``lanes`` optionally names the admission
-    lane per request (default all ``"bulk"``).
+    lane per request (default all ``"bulk"``); ``tenants`` optionally
+    names the submitting tenant per request (observability tag — per-
+    tenant latency views in ``engine.metrics`` and on request trace
+    spans).
 
     Shedding is part of the measured behavior, not an error: a
     reject-newest shed raises :class:`ShedError` synchronously at submit,
@@ -94,9 +98,10 @@ def run_open_loop(engine: MatFnEngine, workload, rate: float, *,
     in-flight arrays and the daemon pipelines device work against host
     assembly — the collector's block is the honest completion point. With
     ``profile=True`` bucket execution already blocked on the scheduler
-    thread, so the future's own ``resolved_at`` timestamp is used instead
-    (exact per-request completion, no collector-position skew, at the cost
-    of serializing buckets).
+    thread, so the future's own engine-clock timestamps are used instead —
+    ``resolved_at - submitted_at``, BOTH stamped by the engine's clock
+    (exact per-request completion, no collector-position skew, no
+    mixed-clock arithmetic, at the cost of serializing buckets).
 
     Returns ``(results, latencies_s, wall_s, info)`` with results and
     latencies in submission order; ``wall_s`` covers submit through last
@@ -128,9 +133,15 @@ def run_open_loop(engine: MatFnEngine, workload, rate: float, *,
                     results[i] = exc
                     continue
                 jax.block_until_ready(r)
-                done = fut.resolved_at if profiled else time.perf_counter()
                 results[i] = r
-                lats[i] = done - t0
+                if profiled and fut.resolved_at is not None \
+                        and fut.submitted_at is not None:
+                    # Both ends on the ENGINE clock (the engine stamps
+                    # resolved_at with the same clock as submitted_at) —
+                    # never engine-clock minus perf_counter.
+                    lats[i] = fut.resolved_at - fut.submitted_at
+                else:
+                    lats[i] = time.perf_counter() - t0
         except BaseException as exc:       # surface on the caller thread
             collector_error.append(exc)
 
@@ -148,7 +159,9 @@ def run_open_loop(engine: MatFnEngine, workload, rate: float, *,
                     break
                 time.sleep(min(remaining, 5e-4))
             try:
-                fut = engine.submit(op, a, power=power, priority=lanes[i])
+                fut = engine.submit(op, a, power=power, priority=lanes[i],
+                                    tenant=None if tenants is None
+                                    else tenants[i])
             except ShedError as exc:       # reject-newest: shed at the door
                 results[i] = exc
                 continue
@@ -222,7 +235,8 @@ def _daemon_main(args, workload):
     engine = MatFnEngine(interpret=args.interpret, max_batch=args.max_batch,
                          profile=True, policy=policy,
                          max_delay_ms=args.max_delay_ms,
-                         admission=admission)
+                         admission=admission,
+                         trace=bool(args.trace))
     engine.start()
     # Prewarm every bucket shape the workload can produce so the timed run
     # never pays a compile on the latency path (steady-state serving).
@@ -236,6 +250,11 @@ def _daemon_main(args, workload):
                                               lanes=lanes)
     shed = info["shed"]
     snap = engine.stats()
+    if args.trace:
+        engine.tracer.export(args.trace)
+        print(f"[matserve] trace: {len(engine.tracer)} spans "
+              f"({engine.tracer.dropped} dropped) -> {args.trace} "
+              f"(load in ui.perfetto.dev or chrome://tracing)")
     engine.close()
 
     offered = args.rate
@@ -269,6 +288,14 @@ def _daemon_main(args, workload):
               f"{crashed}")
     print(f"[matserve]   peak concurrent streams="
           f"{snap['peak_concurrent_streams']}")
+    for stage, h in snap["stages"].items():
+        print(f"[matserve]   stage {stage:9s} n={h['count']:<6d} "
+              f"p50={h['p50']*1e3:7.3f} ms p95={h['p95']*1e3:7.3f} ms "
+              f"total={h['sum']*1e3:8.1f} ms")
+    for ev in snap["watchdog_events"]:
+        print(f"[matserve]   watchdog: step={ev['step']} "
+              f"duration={ev['duration_s']*1e3:.2f} ms "
+              f"median={ev['median_s']*1e3:.2f} ms")
     if args.verify:
         _verify(workload, results)
     return 0
@@ -278,7 +305,7 @@ def _batch_main(args, workload):
     # profile=True: per-bucket wall times for the report below (serializes
     # the flush; serving deployments leave it off).
     engine = MatFnEngine(interpret=args.interpret, max_batch=args.max_batch,
-                         profile=True)
+                         profile=True, trace=bool(args.trace))
     # Warm flush compiles the bucket executables; the timed flush reuses them
     # (steady-state serving: compiles are a one-time cost per bucket shape).
     run_workload(engine, workload)
@@ -304,6 +331,10 @@ def _batch_main(args, workload):
         print(f"[matserve]   bucket {op:6s} n={n:<5d} p={power:<4d} {dtype} "
               f"-> {route:5s} B={row['requests']}/{row['padded_batch']} "
               f"{row['seconds']*1e3:7.2f} ms")
+    if args.trace:
+        engine.tracer.export(args.trace)
+        print(f"[matserve] trace: {len(engine.tracer)} spans -> "
+              f"{args.trace}")
     if args.verify:
         _verify(workload, results)
     return 0
@@ -345,6 +376,10 @@ def main(argv=None):
     ap.add_argument("--priority-frac", type=float, default=0.0,
                     help="daemon mode: fraction of requests submitted on "
                          "the latency lane")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="record request-lifecycle spans and write a "
+                         "Chrome trace-event JSON (Perfetto-loadable) "
+                         "to PATH")
     args = ap.parse_args(argv)
 
     if args.daemon and args.rate <= 0:

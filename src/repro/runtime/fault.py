@@ -42,6 +42,12 @@ class StragglerEvent:
         return (f"straggler at step {self.step}: {self.duration_s:.2f}s vs "
                 f"median {self.median_s:.2f}s")
 
+    def as_tags(self) -> dict:
+        """Plain-dict form for telemetry spans and ``stats()`` rows."""
+        return {"step": self.step,
+                "duration_s": round(self.duration_s, 6),
+                "median_s": round(self.median_s, 6)}
+
 
 class Watchdog:
     """Rolling-median step timer. ``observe`` returns a StragglerEvent when
@@ -83,6 +89,21 @@ class Watchdog:
             if len(self._durations) > self.window:
                 self._durations.pop(0)
         return ev
+
+    def snapshot(self, limit: Optional[int] = None) -> List[dict]:
+        """The collected straggler events as plain dicts (newest last),
+        optionally capped to the most recent ``limit``.
+
+        This is the exposure path for ``events``: the matfn engine embeds
+        it in ``stats()`` and the ``matserve --daemon`` report prints it,
+        so chronic stragglers are visible without reaching into the
+        watchdog object. Taken under the lock for a consistent copy.
+        """
+        with self._lock:
+            events = list(self.events)
+        if limit is not None:
+            events = events[-limit:]
+        return [ev.as_tags() for ev in events]
 
 
 def retry_step(fn: Callable, *args, retries: int = 2, backoff_s: float = 1.0,

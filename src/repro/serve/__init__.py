@@ -13,6 +13,11 @@
                 executor workers (``ExecutionStreams`` config +
                 ``StreamPool``) so concurrent buckets overlap across
                 dispatch routes instead of serializing on the scheduler.
+
+Telemetry (request-lifecycle tracing + histogram metrics) lives in
+:mod:`repro.runtime.telemetry`; the engine threads it through every
+stage (``MatFnEngine(trace=True)``, ``engine.metrics``, and the
+histogram-backed ``engine.stats()``).
 """
 
 from repro.serve.admission import (LANES, POLICIES, AdmissionControl,

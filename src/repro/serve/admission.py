@@ -115,6 +115,13 @@ class ShedError(RuntimeError):
         self.policy = policy
         self.key = key
 
+    def as_tags(self) -> dict:
+        """Plain-dict form for telemetry shed events (tuple keys stringify
+        — Chrome trace args must stay JSON-scalar)."""
+        return {"lane": self.lane, "queue_depth": self.queue_depth,
+                "capacity": self.capacity, "policy": self.policy,
+                "key": None if self.key is None else str(self.key)}
+
 
 @dataclasses.dataclass(frozen=True)
 class PendingView:

@@ -68,10 +68,23 @@ that pipeline as a service layer over the reproduction's chain executors:
     compile-cache entry self-heals instead of re-raising), and only after
     bounded retries fails the bucket's futures with
     :class:`BucketExecutionError`.
-  * **Observability**: ``engine.stats`` remains the live counter dict;
-    CALLING it — ``engine.stats()`` — returns a consistent snapshot with
-    per-lane submitted/shed/retried/flushed counters, live + peak queue
-    depths, and p50/p95 latency per lane.
+  * **Observability** (:mod:`repro.runtime.telemetry`): ``engine.stats``
+    remains the live counter dict; CALLING it — ``engine.stats()`` —
+    returns a consistent snapshot with per-lane submitted/shed/retried/
+    flushed counters, live + peak queue depths, histogram-backed p50/p95
+    latency per lane (log-spaced buckets in a
+    :class:`~repro.runtime.telemetry.MetricsRegistry`, exact over the
+    whole run — no sample window), per-stage latency histograms
+    (queue / assemble / execute / resolve), and the watchdog's straggler
+    events. ``MatFnEngine(trace=True)`` additionally records every
+    request's LIFECYCLE as spans in a bounded ring buffer — submit ->
+    admit/shed -> bucket open -> flush trigger (fill/deadline/priority/
+    kick) -> stream queue -> execute (assemble/compile/device) ->
+    resolve/retry/shed — tagged by (op, n, dtype, lane, route, stream)
+    and exportable as Chrome trace-event JSON
+    (``engine.tracer.export(path)``; load in Perfetto). Near-zero cost
+    when disabled: every record site guards on one attribute. See
+    ``docs/observability.md``.
 
 Flush policies and the injectable clock live in
 :mod:`repro.serve.scheduler`. Driver: ``python -m repro.launch.matserve``
@@ -86,6 +99,7 @@ from __future__ import annotations
 import collections
 import dataclasses
 import functools
+import itertools
 import threading
 import time
 from concurrent.futures import CancelledError, InvalidStateError
@@ -101,6 +115,7 @@ from repro.core.batched import batched_matpow
 from repro.core.expm import expm as _expm
 from repro.kernels import autotune
 from repro.runtime.fault import Watchdog, retry_step
+from repro.runtime.telemetry import NULL_TRACER, MetricsRegistry, Tracer
 from repro.serve.admission import (LANES, AdmissionControl, PendingView,
                                    ShedError)
 from repro.serve.scheduler import (BucketView, FillOrDeadline, FlushPolicy,
@@ -128,10 +143,6 @@ TRIGGERS = ("fill", "deadline", "kick", "drain", "priority")
 #: Bound on ``stats["last_flush"]`` in daemon mode (a long-lived daemon
 #: must not grow an unbounded report list; sync ``flush`` resets it).
 _LAST_FLUSH_ROWS = 256
-
-#: Per-lane latency samples retained for the ``stats()`` p50/p95 (ring
-#: buffer — a long-lived daemon must not grow an unbounded sample list).
-_LANE_LAT_SAMPLES = 4096
 
 #: Straggler-event strings retained in the ``stats()`` snapshot.
 _STRAGGLER_EVENTS = 32
@@ -167,19 +178,31 @@ class MatFnFuture:
     invariant the concurrency suite asserts). ``result`` may return a
     still-in-flight jax array (jax arrays are themselves futures); callers
     that need device completion block on it like any other jax value.
-    ``resolved_at`` records ``time.perf_counter()`` at resolution so
-    open-loop benchmarks can measure latency without polling.
+    ``resolved_at`` records the resolution time so open-loop benchmarks
+    can measure latency without polling — the ENGINE pre-stamps its own
+    injectable clock's now into ``_resolve_at_hint`` before resolving, so
+    ``resolved_at`` shares ``submitted_at``'s epoch and
+    ``resolved_at - submitted_at`` is always well-defined (the old code
+    mixed ``time.perf_counter()`` with the engine clock); a bare
+    ``set_result``/``set_exception`` without a hint falls back to
+    ``time.perf_counter()``. ``tenant`` carries the optional caller-
+    supplied tenant tag and ``rid`` the engine's per-request id (both
+    observability-only — they never affect bucketing or the math).
     """
 
-    __slots__ = ("bucket_key", "lane", "submitted_at", "resolved_at",
+    __slots__ = ("bucket_key", "lane", "tenant", "rid",
+                 "submitted_at", "resolved_at", "_resolve_at_hint",
                  "_event", "_lock", "_result", "_exception")
 
     def __init__(self, bucket_key: Optional[tuple] = None,
                  lane: str = "bulk"):
         self.bucket_key = bucket_key
         self.lane = lane
+        self.tenant: Optional[str] = None
+        self.rid: Optional[int] = None
         self.submitted_at: Optional[float] = None   # engine-clock admit time
         self.resolved_at: Optional[float] = None
+        self._resolve_at_hint: Optional[float] = None
         self._event = threading.Event()
         self._lock = threading.Lock()
         self._result = _UNSET
@@ -188,12 +211,17 @@ class MatFnFuture:
     def done(self) -> bool:
         return self._event.is_set()
 
+    def _stamp(self) -> float:
+        # Engine-clock hint when the engine resolved us, else wall time.
+        return time.perf_counter() if self._resolve_at_hint is None \
+            else self._resolve_at_hint
+
     def set_result(self, value) -> None:
         with self._lock:
             if self._event.is_set():
                 raise InvalidStateError(f"{self!r} already resolved")
             self._result = value
-            self.resolved_at = time.perf_counter()
+            self.resolved_at = self._stamp()
             self._event.set()
 
     def set_exception(self, exc: BaseException) -> None:
@@ -201,7 +229,7 @@ class MatFnFuture:
             if self._event.is_set():
                 raise InvalidStateError(f"{self!r} already resolved")
             self._exception = exc
-            self.resolved_at = time.perf_counter()
+            self.resolved_at = self._stamp()
             self._event.set()
 
     def result(self, timeout: Optional[float] = None):
@@ -412,6 +440,19 @@ class MatFnEngine:
         never delays a due xla or priority flush; ``ExecutionStreams(
         streams=1)`` serializes every route through one worker (the
         pre-streams schedule). Must cover every engine route.
+      trace: request-lifecycle tracing. ``None``/``False`` (default):
+        disabled — every instrumentation point short-circuits on one
+        attribute check (:data:`~repro.runtime.telemetry.NULL_TRACER`).
+        ``True``: record into a fresh
+        :class:`~repro.runtime.telemetry.Tracer` bound to the engine
+        clock (``engine.tracer``; export with
+        ``engine.tracer.export(path)``). A :class:`~repro.runtime.
+        telemetry.Tracer` instance: record into it (bound to the engine
+        clock unless it already has one). Tracing changes the SCHEDULE
+        and the math not at all — the stream-identity CI gates run with
+        it on. Histogram METRICS (``engine.metrics``) are always on:
+        they replace the old per-lane latency deques behind ``stats()``
+        and cost one log2 + index bump per observation.
     """
 
     def __init__(self, *, mesh=None, interpret: bool = False,
@@ -424,7 +465,8 @@ class MatFnEngine:
                  watchdog: Optional[Watchdog] = None,
                  retries: int = 1,
                  retry_backoff_s: float = 0.0,
-                 streams: Optional[ExecutionStreams] = None):
+                 streams: Optional[ExecutionStreams] = None,
+                 trace=None):
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
         if max_delay_ms is not None and not max_delay_ms > 0:
@@ -486,12 +528,36 @@ class MatFnEngine:
         self._waiting = False             # scheduler idle (settle handshake)
         self._scheduler_crash: Optional[BaseException] = None
         # Admission bookkeeping: admitted-but-unflushed requests per lane
-        # (the bounded front-door queue) + per-lane latency samples for
-        # the stats() p50/p95 (engine-clock submit -> resolution).
+        # (the bounded front-door queue).
         self._lane_depth = {lane: 0 for lane in LANES}
-        self._lane_lat = {lane: collections.deque(maxlen=_LANE_LAT_SAMPLES)
-                          for lane in LANES}
         self._straggler_log = collections.deque(maxlen=_STRAGGLER_EVENTS)
+        # Telemetry. Metrics are always on (they back the stats() lane
+        # p50/p95 and the stage breakdown); the tracer defaults to the
+        # shared disabled singleton.
+        self.metrics = MetricsRegistry()
+        if trace is None or trace is False:
+            self.tracer = NULL_TRACER
+        elif trace is True:
+            self.tracer = Tracer(clock=self._clock.now)
+        elif isinstance(trace, Tracer):
+            self.tracer = trace
+            if trace._clock is None:
+                trace.bind_clock(self._clock.now)
+        else:
+            raise TypeError(f"trace must be None, a bool, or a Tracer, "
+                            f"got {type(trace).__name__}")
+        self._rid = itertools.count()
+        # Retune visibility: autotune cache-generation bumps annotate the
+        # trace (a rerouted bucket is otherwise a mystery step in the
+        # timeline). Registered only when tracing — the listener registry
+        # is global, so disabled engines must not accumulate there.
+        self._unsub_retune = None
+        if self.tracer.enabled:
+            tracer = self.tracer
+            self._unsub_retune = autotune.on_generation_bump(
+                lambda gen, reason: tracer.instant(
+                    "retune", track="scheduler",
+                    generation=gen, reason=reason))
         self.stats = _Stats({
             "requests": 0, "buckets": 0, "compiles": 0,
             "cache_hits": 0, "padded_slots": 0,
@@ -506,7 +572,7 @@ class MatFnEngine:
 
     # -- request intake ----------------------------------------------------
     def submit(self, op: str, operand, *, power: int = 1,
-               priority: str = "bulk"):
+               priority: str = "bulk", tenant: Optional[str] = None):
         """Queue one request.
 
         Synchronous mode returns the request's int index into the next
@@ -525,6 +591,13 @@ class MatFnEngine:
         deadline-aware). Lanes only shape the SCHEDULE, never the math —
         both lanes share the executable cache. In synchronous mode the
         daemon queue does not exist, so admission does not apply.
+
+        ``tenant`` optionally names the submitting tenant for
+        observability: resolved latency is additionally recorded under a
+        per-tenant histogram view (``engine.metrics.merged("latency",
+        tenant=...)``) and request trace spans carry the tag. Purely
+        observational — tenants never affect bucketing, admission, or
+        the math; ignored in synchronous mode.
 
         ``operand`` may be a jax or numpy array (kept as-is — the bucket
         assembler stacks them in one jitted call) or anything
@@ -558,7 +631,7 @@ class MatFnEngine:
                 self.stats["requests"] += 1
                 self.stats["lanes"][priority]["submitted"] += 1
                 return len(self._pending) - 1
-        return self._submit_daemon(req, priority)
+        return self._submit_daemon(req, priority, tenant)
 
     def _pending_lane(self, lane: str):
         """(views, refs) over one lane's admitted-but-unflushed requests,
@@ -589,10 +662,12 @@ class MatFnEngine:
             bucket.first_ts = min(m[0].submitted_at for m in bucket.members)
         return fut
 
-    def _submit_daemon(self, req: MatFnRequest,
-                       lane: str = "bulk") -> MatFnFuture:
+    def _submit_daemon(self, req: MatFnRequest, lane: str = "bulk",
+                       tenant: Optional[str] = None) -> MatFnFuture:
         key = req.bucket_key()
         fut = MatFnFuture(key, lane)
+        fut.tenant = tenant
+        fut.rid = next(self._rid)
         # Resolved OUTSIDE the lock: a generation bump makes this read the
         # cache file, and one slow disk read must not stall every producer
         # and the scheduler behind the condition lock. Unused when the
@@ -622,8 +697,19 @@ class MatFnEngine:
                 lane_stats["shed"] += 1
                 shed_depth = self._lane_depth[lane]
                 if idx is None:
-                    raise ShedError(lane, shed_depth, cap,
+                    err = ShedError(lane, shed_depth, cap,
                                     self._admission.policy.name, key)
+                    if self.tracer.enabled:
+                        # Reject-newest never reaches _resolve (submit
+                        # raises), so its terminal request span and shed
+                        # instant are emitted here — every admitted OR
+                        # rejected request still ends in exactly one
+                        # terminal span.
+                        self.tracer.instant("shed", at=now,
+                                            track="requests",
+                                            **err.as_tags())
+                        self._record_request(fut, now, err)
+                    raise err
                 victim = self._shed_admitted(*refs[idx])
             bucket = self._open_buckets.get((key, lane))
             opened = bucket is None
@@ -673,9 +759,10 @@ class MatFnEngine:
             self._dispatch_bucket(direct, "priority")
         if victim is not None:
             # Outside the lock: set_exception wakes the victim's waiters.
-            self._resolve(victim, exc=ShedError(
-                victim.lane, shed_depth, cap, self._admission.policy.name,
-                victim.bucket_key))
+            err = ShedError(victim.lane, shed_depth, cap,
+                            self._admission.policy.name, victim.bucket_key)
+            self.tracer.instant("shed", track="requests", **err.as_tags())
+            self._resolve(victim, exc=err)
         return fut
 
     # -- dispatch policy ---------------------------------------------------
@@ -802,7 +889,7 @@ class MatFnEngine:
         exe = self._executables.get(key)
         if exe is not None:
             self.stats["cache_hits"] += 1
-            return key, exe
+            return key, exe, False
         if route == "sharded":
             # The sharded chain drives its own jitted collective steps (one
             # compiled step shared per mesh/shape) — no outer jit, and no
@@ -837,7 +924,7 @@ class MatFnEngine:
             exe = jax.jit(fn, donate_argnums=0)
         self._executables[key] = exe
         self.stats["compiles"] += 1
-        return key, exe
+        return key, exe, True
 
     def warm(self, op: str, n: int, dtype=jnp.float32, power: int = 1,
              batches=None) -> int:
@@ -894,23 +981,51 @@ class MatFnEngine:
         core both the synchronous ``flush`` and the daemon scheduler run,
         which is what keeps daemon answers bit-identical to synchronous
         ones: same assembly, same executable cache, same routes.
+
+        Stage timing: the three phases — assemble (operand stack + pad +
+        executable lookup), execute (the jitted call; device-complete
+        only under ``profile=True``), resolve (row split) — feed the
+        ``stage`` histograms behind ``stats()["stages"]`` and, when
+        tracing, per-stage spans on the executing thread's track.
         """
         b = len(operands)
         route = self.route_for(n, b, dtype)
         bpad = 1 if route == "sharded" else bucket_batch(b, self.max_batch)
+        clk = self._clock.now
+        t0 = clk()
         stack = _assemble(tuple(operands), bpad=bpad)
-        key, exe = self._executable(op, route, bpad, n, dtype, power)
+        key, exe, fresh = self._executable(op, route, bpad, n, dtype, power)
+        t1 = clk()
         if self.profile:
             # Per-bucket wall time for the stats rows — blocks each bucket,
             # so profiling serializes execution; leave it off to let
-            # buckets dispatch asynchronously.
-            t0 = time.perf_counter()
+            # buckets dispatch asynchronously. perf_counter, not the
+            # engine clock: this dt is honest device wall time even under
+            # a ManualClock test.
+            tp = time.perf_counter()
             out = jax.block_until_ready(exe(stack))
-            dt = time.perf_counter() - t0
+            dt = time.perf_counter() - tp
         else:
             out = exe(stack)
             dt = None
+        t2 = clk()
         rows = _split_rows(out, b=b)   # drops the filler slots too
+        t3 = clk()
+        self.metrics.record("stage", t1 - t0, stage="assemble", route=route)
+        self.metrics.record("stage", t2 - t1, stage="execute", route=route)
+        self.metrics.record("stage", t3 - t2, stage="resolve", route=route)
+        if self.tracer.enabled:
+            track = threading.current_thread().name
+            common = dict(op=op, n=n, dtype=dtype, route=route,
+                          batch=b, padded=bpad)
+            self.tracer.add_span("bucket.assemble", t0, t1, track=track,
+                                 cold=fresh, **common)
+            if fresh:
+                self.tracer.instant("compile", at=t1, track=track, **common)
+            self.tracer.add_span("bucket.execute", t1, t2, track=track,
+                                 profiled=self.profile, **common)
+            self.tracer.add_span("bucket.resolve", t2, t3, track=track,
+                                 **common)
         with self._stats_lock:
             self.stats["padded_slots"] += bpad - b
             self.stats["buckets"] += 1
@@ -978,7 +1093,10 @@ class MatFnEngine:
             # only, so starting it under _cv cannot deadlock.
             self._pool = StreamPool(self._streams, self._stream_execute,
                                     on_free=self._on_stream_free,
-                                    on_crash=self._on_stream_crash).start()
+                                    on_crash=self._on_stream_crash,
+                                    tracer=self.tracer,
+                                    metrics=self.metrics,
+                                    now=self._clock.now).start()
             # Assigned AND started under the lock: from here every submit
             # routes to the daemon (see the mode check in submit()), and a
             # concurrent close() can never join a not-yet-started thread.
@@ -1076,6 +1194,11 @@ class MatFnEngine:
         the thread keeps draining in the background — futures may still
         resolve) instead of silently reporting a completed drain.
         """
+        if self._unsub_retune is not None:
+            # Global listener registry — a closed engine must not keep
+            # annotating traces (idempotent; tolerates double close).
+            self._unsub_retune()
+            self._unsub_retune = None
         if self._daemon is None:
             self._closed = True
             return
@@ -1252,7 +1375,8 @@ class MatFnEngine:
                     self._waiting = True
                     self._cv.notify_all()  # settle() handshake
                     try:
-                        self._clock.wait(self._cv, self._next_timeout(now))
+                        self._clock.traced_wait(
+                            self._cv, self._next_timeout(now), self.tracer)
                     finally:
                         self._waiting = False
             for bucket, trigger in due:
@@ -1270,9 +1394,17 @@ class MatFnEngine:
         bucket's futures (typed, attributable) instead of sinking the
         scheduler.
         """
-        op, n, dtype, _power = bucket.key
+        op, n, dtype, power = bucket.key
         route = self.route_for(n, min(len(bucket.members), self.max_batch),
                                dtype)
+        if self.tracer.enabled:
+            # The batching phase: bucket open (first member's arrival) ->
+            # this dispatch decision, tagged with WHY it flushed.
+            self.tracer.add_span(
+                "bucket.batch", bucket.first_ts, self._clock.now(),
+                track="scheduler", op=op, n=n, dtype=dtype, power=power,
+                lane=bucket.lane, route=route, trigger=trigger,
+                batch=len(bucket.members))
         try:
             bucket.stream = self._pool.dispatch(
                 route, bucket, trigger,
@@ -1334,8 +1466,17 @@ class MatFnEngine:
         """Resolve one future, tolerating an earlier resolution (a
         close(drain=False) cancel or crash sweep racing the executor —
         single-assignment settles who wins, and the loser must not
-        propagate ``InvalidStateError`` into the scheduler). Successful
-        results feed the per-lane latency samples behind ``stats()``."""
+        propagate ``InvalidStateError`` into the scheduler).
+
+        The resolution timestamp comes from the ENGINE clock (same epoch
+        as ``submitted_at`` — the clock-consistency fix: profiled
+        open-loop latency is now always ``resolved_at - submitted_at``
+        with both ends on one clock). Successful results feed the
+        per-lane (and per-tenant, when tagged) latency histograms behind
+        ``stats()``; every winning resolution emits the request's
+        terminal lifecycle span."""
+        at = self._clock.now()
+        fut._resolve_at_hint = at
         try:
             if exc is not None:
                 fut.set_exception(exc)
@@ -1344,9 +1485,38 @@ class MatFnEngine:
         except InvalidStateError:
             return False
         if exc is None and fut.submitted_at is not None:
-            self._lane_lat[fut.lane].append(
-                self._clock.now() - fut.submitted_at)
+            dt = at - fut.submitted_at
+            if fut.tenant is not None:
+                self.metrics.record("latency", dt, lane=fut.lane,
+                                    tenant=fut.tenant)
+            else:
+                self.metrics.record("latency", dt, lane=fut.lane)
+        self._record_request(fut, at, exc)
         return True
+
+    def _record_request(self, fut: MatFnFuture, end: float,
+                        exc: Optional[BaseException]) -> None:
+        """Emit one request's terminal lifecycle span (submit -> terminal,
+        on the ``requests`` track). Exactly-once per request: _resolve
+        only calls this for the WINNING resolution, and the reject-newest
+        shed path (which never reaches _resolve) emits its own."""
+        if not self.tracer.enabled or fut.submitted_at is None:
+            return
+        if exc is None:
+            outcome = "resolved"
+        elif isinstance(exc, ShedError):
+            outcome = "shed"
+        elif isinstance(exc, CancelledError):
+            outcome = "cancelled"
+        else:
+            outcome = "error"
+        op, n, dtype, power = fut.bucket_key
+        tags = dict(op=op, n=n, dtype=dtype, power=power, lane=fut.lane,
+                    rid=fut.rid, outcome=outcome)
+        if fut.tenant is not None:
+            tags["tenant"] = fut.tenant
+        self.tracer.add_span("request", fut.submitted_at, end,
+                             track="requests", **tags)
 
     def _evict_class_executables(self, key: tuple) -> int:
         """Drop every cached executable serving one (op, n, dtype, power)
@@ -1402,6 +1572,10 @@ class MatFnEngine:
                 with self._stats_lock:
                     self.stats["retries"] += 1
                     lane_stats["retried"] += len(chunk)
+                self.tracer.instant(
+                    "retry", track=threading.current_thread().name,
+                    op=op, n=n, dtype=dtype, power=power, lane=bucket.lane,
+                    attempt=attempt, error=type(exc).__name__)
 
             t0 = time.perf_counter()
             try:
@@ -1425,6 +1599,11 @@ class MatFnEngine:
                         self.stats["stragglers"] += 1
                     self._straggler_log.append(
                         f"{event} (bucket {bucket.key}, lane {bucket.lane})")
+                    self.tracer.instant(
+                        "straggler",
+                        track=threading.current_thread().name,
+                        key=str(bucket.key), lane=bucket.lane,
+                        **event.as_tags())
             for (fut, _), row in zip(chunk, rows):
                 self._resolve(fut, value=row)
             with self._stats_lock:
@@ -1438,28 +1617,33 @@ class MatFnEngine:
     def _stats_snapshot(self) -> dict:
         """One consistent point-in-time report (what ``engine.stats()``
         returns): the cumulative counters plus, per lane, the LIVE queue
-        depth, peak depth, and p50/p95 latency over the last
-        ``_LANE_LAT_SAMPLES`` resolutions (engine-clock submit ->
-        resolution — under the serving configuration that is queue wait +
-        assembly + async dispatch, the quantity admission control
-        governs). Taken under the engine lock; cheap enough to poll."""
-
-        def pct(samples, q):
-            if not samples:
-                return None
-            xs = sorted(samples)
-            return xs[min(len(xs) - 1, int(q * (len(xs) - 1) + 0.5))]
-
+        depth, peak depth, and histogram-backed p50/p95 latency over ALL
+        resolutions (engine-clock submit -> resolution — under the
+        serving configuration that is queue wait + assembly + async
+        dispatch, the quantity admission control governs; log-spaced
+        buckets, so quantiles carry ~9% relative error but never forget
+        old samples the way the former deque window did). ``stages``
+        breaks the pipeline down per stage (queue / assemble / execute /
+        resolve) across routes and streams; ``watchdog_events`` surfaces
+        the straggler watchdog's structured event log; ``telemetry``
+        reports the tracer's state. Taken under the engine lock; cheap
+        enough to poll."""
         with self._cv:
             lanes = {}
             for lane in LANES:
                 row = dict(self.stats["lanes"][lane])
                 row["queue_depth"] = self._lane_depth[lane]
-                samples = list(self._lane_lat[lane])
-                p50, p95 = pct(samples, 0.50), pct(samples, 0.95)
-                row["p50_ms"] = None if p50 is None else p50 * 1e3
-                row["p95_ms"] = None if p95 is None else p95 * 1e3
+                hist = self.metrics.merged("latency", lane=lane)
+                row["p50_ms"] = None if hist.count == 0 \
+                    else hist.quantile(0.50) * 1e3
+                row["p95_ms"] = None if hist.count == 0 \
+                    else hist.quantile(0.95) * 1e3
                 lanes[lane] = row
+            stages = {}
+            for stage in ("queue", "assemble", "execute", "resolve"):
+                hist = self.metrics.merged("stage", stage=stage)
+                if hist.count:
+                    stages[stage] = hist.snapshot()
             # Per-stream rows: the pool's own counters merged with the
             # engine's view of which dispatched buckets are still
             # unresolved on each stream. Lock order _cv -> pool lock is
@@ -1495,6 +1679,16 @@ class MatFnEngine:
                     "peak_concurrent_streams": peak,
                     "straggler_events": list(self._straggler_log),
                     "admission_policy": self._admission.policy.name,
+                    "stages": stages,
+                    # getattr: user watchdogs only owe observe() — a
+                    # duck-typed one without snapshot() reports no events
+                    # rather than breaking stats().
+                    "watchdog_events": snap(limit=_STRAGGLER_EVENTS)
+                    if (snap := getattr(self._watchdog, "snapshot",
+                                        None)) is not None else [],
+                    "telemetry": {"tracing": self.tracer.enabled,
+                                  "spans": len(self.tracer),
+                                  "dropped": self.tracer.dropped},
                 }
 
     # -- convenience single-request API ------------------------------------

@@ -167,6 +167,34 @@ class Clock:
     def wait(self, cv: threading.Condition, timeout: Optional[float]) -> None:
         raise NotImplementedError
 
+    def traced_wait(self, cv: threading.Condition, timeout: Optional[float],
+                    tracer) -> None:
+        """``wait`` wrapped in a ``scheduler.wait`` telemetry span.
+
+        The span's ``kind`` tag answers the question a latency
+        investigation always asks of the scheduler: did it sleep out the
+        full bucket deadline (``deadline`` — the wait ended because time
+        ran out) or was it woken early by a submit/kick/close
+        (``wake``)? ``idle`` marks the no-open-buckets sleep (no timeout
+        at all). With a disabled tracer this is exactly ``wait`` — one
+        attribute check of overhead. ``tracer`` is any object with the
+        :class:`repro.runtime.telemetry.Tracer` recording surface.
+        """
+        if not tracer.enabled:
+            self.wait(cv, timeout)
+            return
+        t0 = self.now()
+        self.wait(cv, timeout)
+        t1 = self.now()
+        if timeout is None:
+            kind = "idle"
+        elif t1 - t0 >= timeout:
+            kind = "deadline"
+        else:
+            kind = "wake"
+        tracer.add_span("scheduler.wait", t0, t1, track="scheduler",
+                        kind=kind, timeout_s=timeout)
+
     def wait_for(self, cv: threading.Condition, predicate,
                  poll: float = 0.05) -> None:
         """Block (``cv`` held) until ``predicate()`` is true.

@@ -136,10 +136,17 @@ class ExecutionStreams:
 
 @dataclasses.dataclass
 class _Work:
-    """One dispatched bucket awaiting (or under) execution."""
+    """One dispatched bucket awaiting (or under) execution.
+
+    ``enqueued_at`` is stamped (pool clock) at dispatch so the worker can
+    report the dispatch-to-start gap — the time a bucket sat queued
+    behind earlier work on its stream, the queueing component of tail
+    latency that stream counts exist to shrink.
+    """
     bucket: object
     trigger: str
     priority: bool
+    enqueued_at: float = 0.0
 
 
 class _Job:
@@ -187,12 +194,24 @@ class StreamPool:
                  execute: Callable, *,
                  on_free: Optional[Callable] = None,
                  on_crash: Optional[Callable] = None,
-                 name: str = "matfn"):
+                 name: str = "matfn",
+                 tracer=None, metrics=None,
+                 now: Optional[Callable] = None):
         self.config = config
         self._execute = execute
         self._on_free = on_free
         self._on_crash = on_crash
         self._name = name
+        # Telemetry (all optional; the engine passes its tracer/registry
+        # and clock so stream timestamps share the request timeline).
+        # ``stream.queue`` spans + queue-depth counters per worker, and
+        # the dispatch-to-start gap feeds the "queue" stage histogram.
+        if tracer is None:
+            from repro.runtime.telemetry import NULL_TRACER
+            tracer = NULL_TRACER
+        self._tracer = tracer
+        self._metrics = metrics
+        self._now = now if now is not None else time.monotonic
         self._cv = threading.Condition()
         n = config.streams
         self._queues: List[collections.deque] = [collections.deque()
@@ -252,7 +271,7 @@ class StreamPool:
         FIFO within each class, preemption between them.
         """
         i = self.config.stream_for(route)
-        work = _Work(bucket, trigger, priority)
+        work = _Work(bucket, trigger, priority, enqueued_at=self._now())
         with self._cv:
             if self._closing:
                 raise RuntimeError("stream pool is closed")
@@ -345,6 +364,7 @@ class StreamPool:
                     return                    # closing and drained
                 item = self._queues[i].popleft()
                 self._busy[i] = item if isinstance(item, _Work) else None
+                qlen = len(self._queues[i])
                 if isinstance(item, _Work):
                     self._concurrent += 1
                     self.peak_concurrent = max(self.peak_concurrent,
@@ -354,6 +374,23 @@ class StreamPool:
                 if self._on_free is not None:
                     self._on_free(i)
                 continue
+            if self._metrics is not None or self._tracer.enabled:
+                started = self._now()
+                gap = max(started - item.enqueued_at, 0.0)
+                if self._metrics is not None:
+                    self._metrics.record("stage", gap, stage="queue",
+                                         stream=str(i))
+                if self._tracer.enabled:
+                    track = f"stream-{i}"
+                    bucket = item.bucket
+                    self._tracer.add_span(
+                        "stream.queue", item.enqueued_at, started,
+                        track=track, trigger=item.trigger,
+                        priority=item.priority,
+                        key=str(getattr(bucket, "key", None)),
+                        lane=getattr(bucket, "lane", None))
+                    self._tracer.counter("stream.queue_depth", qlen,
+                                         at=started, track=track)
             try:
                 self._execute(item.bucket, item.trigger, i)
             except BaseException as exc:
