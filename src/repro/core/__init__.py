@@ -19,6 +19,13 @@ from repro.core.batched import (
     batched_matpow,
     batched_expm,
 )
+from repro.core.markov import (
+    validate_stochastic,
+    markov_power,
+    steady_state,
+    evolve_distributions,
+    SteadyStateResult,
+)
 from repro.core.scan import prefix_scan, prefix_products, decay_prefix
 from repro.core.distributed import (
     matmul_2d_gather,
@@ -33,6 +40,8 @@ __all__ = [
     "matpow_naive", "matpow_binary", "matpow_binary_traced", "matmul_backend",
     "chain_for",
     "expm", "BatchedMatmulChain", "batched_matpow", "batched_expm",
+    "validate_stochastic", "markov_power", "steady_state",
+    "evolve_distributions", "SteadyStateResult",
     "prefix_scan", "prefix_products", "decay_prefix",
     "matmul_2d_gather", "matmul_cannon", "sharded_matmul",
     "ShardedMatmulChain", "matpow_sharded", "expm_sharded",

@@ -428,8 +428,9 @@ def expm_sharded(a: jax.Array, mesh: Mesh, *, max_squarings: int = 32,
 
     def body(i, r_cur):
         sq = chain.square(r_cur)
-        keep = (i < s).astype(compute.dtype)   # (1, 1) mask, broadcasts
-        return keep * sq + (1.0 - keep) * r_cur
+        # jnp.where, NOT multiply-masking: a masked squaring that overflows
+        # to inf would turn 0 * inf into NaN (mirrors core/expm.py's fix).
+        return jnp.where(i < s, sq, r_cur)
 
     r = lax.fori_loop(0, jnp.max(s), body, r)
     return chain.unpad(r).astype(dtype)

@@ -93,8 +93,10 @@ def expm(a: jax.Array, *, max_squarings: int = 32,
     def body(i, val):
         r_cur = val
         sq = square(r_cur)
-        keep = (i < s).astype(compute.dtype)  # broadcast (..., 1, 1)
-        return keep * sq + (1.0 - keep) * r_cur
+        # jnp.where, NOT multiply-masking: a finished member's wasted extra
+        # squaring can overflow to inf in fp32, and 0 * inf = NaN would
+        # corrupt its already-correct result. (i < s) broadcasts (..., 1, 1).
+        return jnp.where(i < s, sq, r_cur)
 
     r = lax.fori_loop(0, s_scalar, body, r)
     if chain is not None:

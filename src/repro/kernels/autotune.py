@@ -96,13 +96,16 @@ __all__ = [
     "DEFAULT_FASTMM_CROSSOVER", "DEFAULT_FASTMM_LEVELS", "fastmm_config",
     "record_fastmm", "sweep_fastmm",
     "DEFAULT_MAX_DELAY_MS", "bucket_deadline_ms", "record_bucket_deadline",
+    "DEFAULT_MARKOV_EVOLVE_THRESHOLD", "markov_evolve_threshold",
+    "record_markov_evolve_threshold",
     "cache_generation", "on_generation_bump",
 ]
 
 _ENV_VAR = "REPRO_AUTOTUNE_CACHE"
 
 #: Kernel namespaces the cache knows about (the first segment of every key).
-KERNELS = ("matmul", "attention", "square_panel", "dispatch", "fastmm")
+KERNELS = ("matmul", "attention", "square_panel", "dispatch", "fastmm",
+           "markov")
 
 #: Default VMEM working-set budget shared by ops.pick_blocks and the sweep
 #: scorer — ONE definition so the heuristic and the cache never disagree.
@@ -284,6 +287,12 @@ def _deadline_key(op: str, n: int, dtype=None,
     return f"dispatch/deadline/{op}/{n}/{d}/{b}"
 
 
+def _markov_key(dtype=None, backend: Optional[str] = None) -> str:
+    d = jnp.dtype(dtype).name if dtype is not None else "any"
+    b = backend or jax.default_backend()
+    return f"markov/evolve/{d}/{b}"
+
+
 def _ascending_pair(vals) -> bool:
     return (len(vals) == 2
             and all(isinstance(x, int) and x > 0 for x in vals)
@@ -296,12 +305,17 @@ def _valid_entry(entry) -> bool:
     (both: two ascending positive ints), or a ``dispatch`` deadline entry
     (one positive finite ``max_delay_ms``), or a ``fastmm`` config entry
     (``[crossover_n, max_levels]`` — positive int and non-negative int —
-    with optional 3-int positive ``leaf_blocks``)."""
+    with optional 3-int positive ``leaf_blocks``), or a ``markov`` evolve
+    dispatch entry (one positive finite ``evolve_threshold`` B/n ratio)."""
     try:
         if "tiers" in entry:
             return _ascending_pair(entry["tiers"])
         if "thresholds" in entry:
             return _ascending_pair(entry["thresholds"])
+        if "evolve_threshold" in entry:
+            v = entry["evolve_threshold"]
+            return (isinstance(v, (int, float)) and not isinstance(v, bool)
+                    and math.isfinite(v) and v > 0)
         if "fastmm" in entry:
             cfg = entry["fastmm"]
             leaf = entry.get("leaf_blocks")
@@ -643,6 +657,58 @@ def record_bucket_deadline(op: str, n: int, max_delay_ms: float, dtype=None,
         "measured": bool(measured),
     }
     _bump_generation("record:deadline")
+    if save:
+        save_cache(cache)
+
+
+#: Modeled evolve-vs-dense dispatch ratio: the evolve route's extra
+#: per-set-bit O(B n^2) vecmats beat the dense route's saved O(n^3)
+#: combines roughly while B <= n, so the default threshold is B/n = 1.
+DEFAULT_MARKOV_EVOLVE_THRESHOLD: float = 1.0
+
+
+def markov_evolve_threshold(dtype=None, backend: Optional[str] = None) -> float:
+    """Max B/n ratio for the markov `evolve` route (``core.markov``).
+
+    ``evolve_distributions`` (and the engine's evolve dispatch) routes a
+    B-distribution batch through per-bit vector–matrix products while
+    ``B <= threshold * n``, and falls back to dense matpow + one apply
+    above it. Consults the ``markov`` cache namespace (dtype-specific
+    entry first, then dtype-agnostic) and falls back to the modeled
+    default. Resolution happens outside any jit, so a retuned entry takes
+    effect on the next dispatch instead of being baked into a stale
+    executable.
+    """
+    cache = load_cache()
+    for key in (_markov_key(dtype, backend), _markov_key(None, backend)):
+        entry = cache.get(key)
+        if (entry is not None and _valid_entry(entry)
+                and "evolve_threshold" in entry):
+            return float(entry["evolve_threshold"])
+    return DEFAULT_MARKOV_EVOLVE_THRESHOLD
+
+
+def record_markov_evolve_threshold(threshold: float, dtype=None,
+                                   backend: Optional[str] = None,
+                                   measured: bool = False,
+                                   save: bool = True) -> None:
+    """Store a tuned evolve-vs-dense B/n dispatch ratio.
+
+    ``measured`` records provenance exactly like the block namespaces:
+    hardware sweeps that timed the real evolve/dense crossover record
+    ``True`` so the modeled default can be invalidated wholesale.
+    """
+    if not (isinstance(threshold, (int, float))
+            and not isinstance(threshold, bool)
+            and math.isfinite(threshold) and threshold > 0):
+        raise ValueError(f"markov evolve threshold must be a positive "
+                         f"finite number, got {threshold!r}")
+    cache = load_cache()
+    cache[_markov_key(dtype, backend)] = {
+        "evolve_threshold": float(threshold),
+        "measured": bool(measured),
+    }
+    _bump_generation("record:markov")
     if save:
         save_cache(cache)
 

@@ -15,12 +15,15 @@ latency percentiles next to throughput::
     PYTHONPATH=src python -m repro.launch.matserve \
         --daemon --rate 500 --requests 256 --sizes 16,32 --powers 7,12
 
-Generates a randomized workload of matpow/expm requests over mixed sizes,
-powers, and dtypes and prints throughput plus the engine's
-bucket/route/cache statistics. ``--verify`` additionally replays every
-request as a per-matrix call and reports the max deviation (0.0 wherever
-batched and serial run the same kernels — every route off-TPU; the on-TPU
-chain/sharded routes differ by kernel accumulation order, see
+Generates a randomized workload of matpow/expm/markov requests over mixed
+sizes, powers, and dtypes and prints throughput plus the engine's
+bucket/route/cache statistics. ``--markov-frac`` mixes in stochastic-matrix
+traffic: steady-state queries (convergence-aware squaring) and — for the
+``--evolve-frac`` share of them — distribution-evolution requests carrying a
+``(B, n)`` stack of start distributions. ``--verify`` additionally replays
+every request as a per-matrix call and reports the max deviation (0.0
+wherever batched and serial run the same kernels — every route off-TPU; the
+on-TPU chain/sharded routes differ by kernel accumulation order, see
 docs/serving.md).
 """
 
@@ -36,19 +39,43 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.serve.admission import POLICIES, AdmissionControl, ShedError
-from repro.serve.matfn import MatFnEngine
+from repro.serve.matfn import ROUTES, MatFnEngine
 
 
 def make_workload(n_requests: int, sizes, powers, expm_frac: float,
-                  seed: int, dtypes=("float32",)):
-    """A reproducible mixed request list: (op, operand, power) tuples."""
+                  seed: int, dtypes=("float32",), markov_frac: float = 0.0,
+                  evolve_frac: float = 0.5, evolve_batch: int = 4):
+    """A reproducible mixed request list.
+
+    Entries are ``(op, operand, power)`` tuples; markov evolve entries
+    (a ``markov_frac * evolve_frac`` share) carry a fourth element, the
+    ``(evolve_batch, n)`` stack of start distributions. Everything that
+    consumes a workload unpacks ``op, a, power, *rest`` so plain 3-tuple
+    workloads (the benchmarks build those) keep working.
+    """
     rng = np.random.default_rng(seed)
     work = []
     for _ in range(n_requests):
         n = int(rng.choice(sizes))
         dtype = jnp.dtype(str(rng.choice(dtypes)))
-        a = jnp.asarray(rng.standard_normal((n, n)) * 0.4 / np.sqrt(n), dtype)
-        if rng.random() < expm_frac:
+        raw = rng.standard_normal((n, n))
+        a = jnp.asarray(raw * 0.4 / np.sqrt(n), dtype)
+        draw = rng.random()
+        if draw < markov_frac:
+            # Derive a stochastic matrix from the already-drawn gaussian:
+            # strictly positive rows -> irreducible, aperiodic, fast-mixing
+            # (the chain both converges and exercises the early exit), and
+            # with markov_frac=0 the rng stream is bit-identical to the
+            # pre-markov workloads the benchmarks were tuned on.
+            m = np.abs(raw) + 0.05
+            p = jnp.asarray(m / m.sum(axis=1, keepdims=True), dtype)
+            if rng.random() < evolve_frac:
+                d = rng.random((evolve_batch, n))
+                d = jnp.asarray(d / d.sum(axis=1, keepdims=True), dtype)
+                work.append(("markov", p, int(rng.choice(powers)), d))
+            else:
+                work.append(("markov", p, 1))
+        elif draw < markov_frac + expm_frac:
             work.append(("expm", a, 1))
         else:
             work.append(("matpow", a, int(rng.choice(powers))))
@@ -58,8 +85,8 @@ def make_workload(n_requests: int, sizes, powers, expm_frac: float,
 def run_workload(engine: MatFnEngine, workload):
     """Submit everything, flush once; returns (results, seconds)."""
     t0 = time.perf_counter()
-    for op, a, power in workload:
-        engine.submit(op, a, power=power)
+    for op, a, power, *rest in workload:
+        engine.submit(op, a, power=power, dists=rest[0] if rest else None)
     results = engine.flush()
     return results, time.perf_counter() - t0
 
@@ -150,7 +177,7 @@ def run_open_loop(engine: MatFnEngine, workload, rate: float, *,
     t_start = time.perf_counter()
     submit_wall = 0.0
     try:
-        for i, (op, a, power) in enumerate(workload):
+        for i, (op, a, power, *rest) in enumerate(workload):
             target = t_start + (arrivals[i] if arrivals is not None
                                 else i / rate)
             while True:
@@ -159,7 +186,9 @@ def run_open_loop(engine: MatFnEngine, workload, rate: float, *,
                     break
                 time.sleep(min(remaining, 5e-4))
             try:
-                fut = engine.submit(op, a, power=power, priority=lanes[i],
+                fut = engine.submit(op, a, power=power,
+                                    dists=rest[0] if rest else None,
+                                    priority=lanes[i],
                                     tenant=None if tenants is None
                                     else tenants[i])
             except ShedError as exc:       # reject-newest: shed at the door
@@ -181,7 +210,8 @@ def run_open_loop(engine: MatFnEngine, workload, rate: float, *,
 
 
 def _verify(workload, results):
-    from repro.core import expm, matpow_binary
+    from repro.core import (evolve_distributions, expm, matpow_binary,
+                            steady_state)
 
     # One jit wrapper per (op, power) — a fresh jax.jit object per
     # request would recompile the same program for every request.
@@ -195,10 +225,15 @@ def _verify(workload, results):
         return fns[key]
 
     worst = 0.0
-    for (op, a, power), got in zip(workload, results):
+    for (op, a, power, *rest), got in zip(workload, results):
         if isinstance(got, ShedError):     # shed requests have no answer
             continue
-        want = fn_for(op, power)(a)
+        if op == "markov" and rest:        # evolve: compare the dist stacks
+            want = evolve_distributions(rest[0], a, power, validate=False)
+        elif op == "markov":               # steady state: compare the pis
+            want, got = steady_state(a, validate=False).pi, got.pi
+        else:
+            want = fn_for(op, power)(a)
         worst = max(worst, float(jnp.max(jnp.abs(
             got.astype(jnp.float32) - want.astype(jnp.float32)))))
     print(f"[matserve] verify: max |batched - per-matrix| = {worst:.2e}")
@@ -240,8 +275,11 @@ def _daemon_main(args, workload):
     engine.start()
     # Prewarm every bucket shape the workload can produce so the timed run
     # never pays a compile on the latency path (steady-state serving).
+    # Evolve requests are skipped: their bucket classes are keyed on
+    # (steps, B) and pay their own first compile (see MatFnEngine.warm).
     for op, n, dtype, power in {(op, a.shape[0], a.dtype.name, p)
-                                for op, a, p in workload}:
+                                for op, a, p, *rest in workload
+                                if not rest}:
         engine.warm(op, n, dtype=dtype, power=power)
     rng = np.random.default_rng(args.seed + 1)
     lanes = ["latency" if rng.random() < args.priority_frac else "bulk"
@@ -318,8 +356,7 @@ def _batch_main(args, workload):
     # next to the single-flush throughput line. Compiles stay cumulative
     # (they all happened in the warm flush; the timed flush reuses them).
     rows = s["last_flush"]
-    routes = {r: sum(1 for x in rows if x["route"] == r)
-              for r in ("xla", "chain", "sharded")}
+    routes = {r: sum(1 for x in rows if x["route"] == r) for r in ROUTES}
     padded = sum(x["padded_batch"] - x["requests"] for x in rows)
     print(f"[matserve] {args.requests} requests in {dt*1e3:.1f} ms "
           f"({args.requests/dt:.0f} req/s) — thresholds={engine.thresholds}")
@@ -328,8 +365,10 @@ def _batch_main(args, workload):
           f"padded_slots={padded} routes={routes}")
     for row in rows:
         op, route, bpad, n, dtype, power = row["key"]
-        print(f"[matserve]   bucket {op:6s} n={n:<5d} p={power:<4d} {dtype} "
-              f"-> {route:5s} B={row['requests']}/{row['padded_batch']} "
+        # markov evolve buckets carry a ('evolve', steps, B) power slot
+        p = power if isinstance(power, int) else f"{power[1]}x{power[2]}"
+        print(f"[matserve]   bucket {op:6s} n={n:<5d} p={p!s:<4} {dtype} "
+              f"-> {route:6s} B={row['requests']}/{row['padded_batch']} "
               f"{row['seconds']*1e3:7.2f} ms")
     if args.trace:
         engine.tracer.export(args.trace)
@@ -349,6 +388,15 @@ def main(argv=None):
                     help="comma-separated matpow powers")
     ap.add_argument("--expm-frac", type=float, default=0.25,
                     help="fraction of requests that are expm")
+    ap.add_argument("--markov-frac", type=float, default=0.0,
+                    help="fraction of requests that are stochastic-matrix "
+                         "(markov) traffic")
+    ap.add_argument("--evolve-frac", type=float, default=0.5,
+                    help="fraction of markov requests that evolve a "
+                         "distribution stack (the rest query the steady "
+                         "state)")
+    ap.add_argument("--evolve-batch", type=int, default=4,
+                    help="distributions per evolve request (B)")
     ap.add_argument("--dtypes", default="float32",
                     help="comma-separated operand dtypes (e.g. float32,bfloat16)")
     ap.add_argument("--max-batch", type=int, default=64)
@@ -388,11 +436,21 @@ def main(argv=None):
         ap.error("--priority-frac must be in [0, 1]")
     if args.max_delay_ms is not None and args.max_delay_ms <= 0:
         ap.error("--max-delay-ms must be > 0")
+    if not 0.0 <= args.markov_frac <= 1.0 or \
+            not 0.0 <= args.evolve_frac <= 1.0:
+        ap.error("--markov-frac and --evolve-frac must be in [0, 1]")
+    if args.markov_frac + args.expm_frac > 1.0:
+        ap.error("--markov-frac + --expm-frac must not exceed 1")
+    if args.evolve_batch < 1:
+        ap.error("--evolve-batch must be >= 1")
     sizes = [int(s) for s in args.sizes.split(",")]
     powers = [int(p) for p in args.powers.split(",")]
     dtypes = args.dtypes.split(",")
     workload = make_workload(args.requests, sizes, powers, args.expm_frac,
-                             args.seed, dtypes=dtypes)
+                             args.seed, dtypes=dtypes,
+                             markov_frac=args.markov_frac,
+                             evolve_frac=args.evolve_frac,
+                             evolve_batch=args.evolve_batch)
     if args.daemon:
         return _daemon_main(args, workload)
     return _batch_main(args, workload)

@@ -4,7 +4,7 @@ histogram metrics.
 The paper's 1000x claim is a *measurement* story — knowing exactly where
 time goes (host staging vs kernel vs transfer on the Tesla C2050) is what
 justified the heterogeneous split in the first place. The serving stack
-grown in PRs 4-8 has four dispatch routes, two admission lanes, per-route
+grown in PRs 4-8 has five dispatch routes, two admission lanes, per-route
 execution streams, retries, and shedding, but until this module the only
 window into it was aggregate counters: a slow p95 could not be attributed
 to queueing vs assembly vs compile vs device time. This module is the
@@ -46,6 +46,7 @@ Span taxonomy, overhead notes, and the Perfetto how-to live in
 from __future__ import annotations
 
 import collections
+import itertools
 import json
 import math
 import threading
@@ -53,13 +54,20 @@ from typing import Callable, Dict, List, Optional, Tuple
 
 __all__ = [
     "Histogram", "MetricsRegistry", "Tracer", "NULL_TRACER",
-    "DEFAULT_TRACE_CAPACITY", "SPAN_KINDS", "REQUEST_OUTCOMES",
+    "DEFAULT_TRACE_CAPACITY", "SNAPSHOT_CHUNK", "SPAN_KINDS",
+    "REQUEST_OUTCOMES",
 ]
 
 #: Default ring-buffer bound for a Tracer (spans, not bytes). At ~7 spans
 #: per bucket plus 1 per request, 65536 covers several thousand buckets —
 #: hours of steady-state serving between exports.
 DEFAULT_TRACE_CAPACITY = 65536
+
+#: Spans copied per lock acquisition when exporting. A full-capacity ring
+#: snapshotted in one pass holds the lock for ~65536 dict copies, stalling
+#: every recording thread for the duration; chunking bounds each hold to
+#: one slice and lets recorders interleave between chunks.
+SNAPSHOT_CHUNK = 2048
 
 #: The span/instant names the serving stack emits (the taxonomy tests and
 #: docs/observability.md enumerate; user code may add its own).
@@ -311,9 +319,13 @@ class Tracer:
     its injectable scheduler clock so ManualClock daemon tests record
     deterministic timelines. All span times are in the clock's epoch.
 
-    Thread-safety: spans append to a ``deque(maxlen=...)`` — atomic under
-    the GIL, and overflow drops the oldest span while ``dropped`` counts
-    the loss (a trace must say when it is partial).
+    Thread-safety: spans append to a ``deque(maxlen=...)`` under a lock —
+    overflow drops the oldest span while ``dropped`` counts the loss (a
+    trace must say when it is partial). Export snapshots the ring in
+    :data:`SNAPSHOT_CHUNK`-span slices, releasing the lock between chunks,
+    so a full 65536-span export never stalls recording threads for the
+    whole copy; spans evicted mid-export shift the cursor by the observed
+    ``dropped`` delta, so the snapshot has no duplicates and no re-reads.
     """
 
     def __init__(self, capacity: int = DEFAULT_TRACE_CAPACITY, *,
@@ -341,6 +353,17 @@ class Tracer:
         return time.perf_counter()
 
     # -- recording ---------------------------------------------------------
+    def _append(self, rec: dict) -> None:
+        """Append one record under the lock, counting ring overflow. The
+        lock (rather than relying on the deque's atomic append) keeps the
+        dropped count exact AND lets the chunked exporter iterate a stable
+        ring slice — a concurrent ``deque.append`` during ``islice`` raises
+        'deque mutated during iteration'."""
+        with self._lock:
+            if len(self._spans) == self.capacity:
+                self._dropped += 1
+            self._spans.append(rec)
+
     def add_span(self, name: str, start: float, end: float, *,
                  track: str = "main", **tags) -> None:
         """Record one complete span with explicit clock times (the serving
@@ -350,12 +373,9 @@ class Tracer:
         rows (one per execution stream / scheduler / submit side)."""
         if not self.enabled:
             return
-        if len(self._spans) == self.capacity:
-            with self._lock:
-                self._dropped += 1
-        self._spans.append({"name": name, "ph": "X", "ts": start,
-                            "dur": max(end - start, 0.0), "track": track,
-                            "args": tags})
+        self._append({"name": name, "ph": "X", "ts": start,
+                      "dur": max(end - start, 0.0), "track": track,
+                      "args": tags})
 
     def instant(self, name: str, *, track: str = "main", at: Optional[float]
                 = None, **tags) -> None:
@@ -363,12 +383,9 @@ class Tracer:
         retune)."""
         if not self.enabled:
             return
-        if len(self._spans) == self.capacity:
-            with self._lock:
-                self._dropped += 1
-        self._spans.append({"name": name, "ph": "i",
-                            "ts": self.now() if at is None else at,
-                            "track": track, "args": tags})
+        self._append({"name": name, "ph": "i",
+                      "ts": self.now() if at is None else at,
+                      "track": track, "args": tags})
 
     def counter(self, name: str, value: float, *, track: str = "main",
                 at: Optional[float] = None, **tags) -> None:
@@ -376,13 +393,10 @@ class Tracer:
         counter track in Perfetto."""
         if not self.enabled:
             return
-        if len(self._spans) == self.capacity:
-            with self._lock:
-                self._dropped += 1
-        self._spans.append({"name": name, "ph": "C",
-                            "ts": self.now() if at is None else at,
-                            "track": track,
-                            "args": dict(tags, value=value)})
+        self._append({"name": name, "ph": "C",
+                      "ts": self.now() if at is None else at,
+                      "track": track,
+                      "args": dict(tags, value=value)})
 
     class _Span:
         __slots__ = ("_tracer", "_name", "_track", "_tags", "_t0")
@@ -421,19 +435,47 @@ class Tracer:
             self._spans.clear()
             self._dropped = 0
 
+    def _snapshot_spans(self, chunk: int = SNAPSHOT_CHUNK) -> List[dict]:
+        """Copy the ring in ``chunk``-span slices, releasing the lock
+        between slices so recording threads interleave with a large
+        export. Records appended after a slice was copied are picked up by
+        later slices; records evicted after copying stay in the snapshot
+        (they were live at copy time). Between slices the cursor shifts
+        left by the eviction count observed via ``_dropped``, so no span
+        is copied twice and none still in the ring is skipped."""
+        if chunk < 1:
+            raise ValueError(f"chunk must be >= 1, got {chunk}")
+        out: List[dict] = []
+        pos = 0
+        last_dropped: Optional[int] = None
+        while True:
+            with self._lock:
+                if last_dropped is not None:
+                    # Evictions since the previous slice shifted every
+                    # surviving span left by the same amount.
+                    pos = max(pos - (self._dropped - last_dropped), 0)
+                last_dropped = self._dropped
+                sl = list(itertools.islice(self._spans, pos, pos + chunk))
+            if not sl:
+                return out
+            out.extend(sl)
+            pos += len(sl)
+
     def spans(self) -> List[dict]:
         """Plain-dict copies of the recorded spans, in record order (the
         test-facing form; times in clock seconds)."""
-        return [dict(s, args=dict(s["args"])) for s in list(self._spans)]
+        return [dict(s, args=dict(s["args"]))
+                for s in self._snapshot_spans()]
 
     def to_chrome(self) -> dict:
         """Chrome trace-event JSON (https://docs.google.com/document/d/1CvAClvFfyA5R-PhYUmn5OOQtYMH4h6I0nSsKchNAySU)
         — load the written file in Perfetto (ui.perfetto.dev) or
         chrome://tracing. Tracks map to thread ids; times convert from
         clock seconds to microseconds."""
+        snapshot = self._snapshot_spans()
         tracks: Dict[str, int] = {}
         events = []
-        for s in list(self._spans):
+        for s in snapshot:
             track = s["track"]
             tid = tracks.setdefault(track, len(tracks) + 1)
             ev = {
@@ -459,7 +501,7 @@ class Tracer:
         return {"traceEvents": meta + events,
                 "displayTimeUnit": "ms",
                 "otherData": {"dropped_spans": self._dropped,
-                              "recorded_spans": len(self._spans)}}
+                              "recorded_spans": len(snapshot)}}
 
     def export(self, path) -> None:
         """Write ``to_chrome()`` as JSON to ``path``."""

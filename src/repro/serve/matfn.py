@@ -5,8 +5,14 @@ The paper's headline pipeline keeps the accelerator saturated across
 matrices "of different sizes and with different powers". This module is
 that pipeline as a service layer over the reproduction's chain executors:
 
-  * **Requests** (:class:`MatFnRequest`) name an op (``matpow`` / ``expm``),
-    an (n, n) operand, and — for matpow — a static power.
+  * **Requests** (:class:`MatFnRequest`) name an op (``matpow`` / ``expm``
+    / ``markov``), an (n, n) operand, and — for matpow — a static power.
+    ``markov`` is the stochastic op class (:mod:`repro.core.markov`): with
+    no ``dists`` a request is a steady-state query (convergence-aware
+    early-exit squaring; resolves with a
+    :class:`~repro.core.markov.SteadyStateResult`), with a (B, n) ``dists``
+    stack it is a distribution-evolution query over ``power`` transitions
+    (resolves with the evolved (B, n) stack).
   * **Bucketing**: pending requests group by ``(op, n, dtype, power)``; each
     group is stacked into a (B, n, n) operand whose batch dim is padded up
     to the next power of two (identity work on zero-matrix filler slots), so
@@ -127,13 +133,24 @@ __all__ = ["MatFnRequest", "MatFnEngine", "MatFnFuture",
            "ExecutionStreams", "OPS", "ROUTES", "TRIGGERS"]
 
 #: Ops the engine serves.
-OPS = ("matpow", "expm")
+OPS = ("matpow", "expm", "markov")
 
 #: Dispatch routes a bucket can take (see :meth:`MatFnEngine.route_for`).
 #: ``xla``/``chain``/``sharded`` are bit-identical to per-matrix calls of
 #: the same kernels; ``fastmm`` (Strassen recursion above the autotuned
 #: crossover) is tolerance-bounded — see ``kernels.fastmm.error_budget``.
-ROUTES = ("xla", "chain", "sharded", "fastmm")
+#: ``evolve`` serves markov distribution-evolution buckets — (B, n)
+#: vector-matrix chains through the tuned dense tiles, an entirely
+#: different (much cheaper) kernel shape from the dense-square routes.
+ROUTES = ("xla", "chain", "sharded", "fastmm", "evolve")
+
+
+def _is_evolve(power) -> bool:
+    """True for the evolve bucket power slot ``("evolve", steps, B)`` —
+    the markov distribution-evolution traffic class (steady-state markov
+    buckets use the scalar -1 slot like expm)."""
+    return isinstance(power, tuple) and len(power) == 3 \
+        and power[0] == "evolve"
 
 #: Flush triggers the daemon distinguishes in ``stats["flush_triggers"]``
 #: (``priority`` = a latency-lane request at n >= bypass_n forced its
@@ -259,15 +276,26 @@ class MatFnFuture:
 
 @dataclasses.dataclass(frozen=True)
 class MatFnRequest:
-    """One matrix-function request: ``op(operand[, power])``.
+    """One matrix-function request: ``op(operand[, power][, dists])``.
 
     ``operand`` must be one (n, n) square matrix with n >= 1; ``power`` is
-    only meaningful for ``op="matpow"`` and must be a static python
-    int >= 0 (``power == 0`` answers the identity, the matpow contract).
+    a static python int, meaningful for ``op="matpow"`` (>= 0; ``power ==
+    0`` answers the identity, the matpow contract) and for markov evolve
+    requests (the transition horizon, >= 0). ``dists`` (markov only) is a
+    (B, n) stack of start distributions sharing ``operand`` as their
+    transition matrix — its presence selects the evolve traffic class;
+    without it a markov request is a steady-state query. ``dists`` must
+    match the operand dtype: the bucket assembler stacks per-dtype, and a
+    silent promotion would split identical-math requests across
+    executables. The engine does NOT validate stochasticity — gate inputs
+    with :func:`repro.core.markov.validate_stochastic` at the admission
+    edge (a device-sync row-sum check per submit would stall the daemon's
+    hot path).
     """
     op: str
     operand: jax.Array
     power: int = 1
+    dists: Optional[jax.Array] = None
 
     def __post_init__(self):
         if self.op not in OPS:
@@ -276,22 +304,51 @@ class MatFnRequest:
         if a.ndim != 2 or a.shape[0] != a.shape[1] or a.shape[0] < 1:
             raise ValueError(f"{self.op} requests need one (n, n) matrix "
                              f"with n >= 1, got shape {a.shape}")
-        if self.op == "matpow":
-            if not isinstance(self.power, int):
-                raise TypeError("matpow requests need a static python int "
-                                "power (one executable per power)")
+        if self.dists is not None and self.op != "markov":
+            raise ValueError(f"dists is only meaningful for op='markov', "
+                             f"got op={self.op!r}")
+        if self.op == "matpow" or (self.op == "markov"
+                                   and self.dists is not None):
+            if not isinstance(self.power, int) \
+                    or isinstance(self.power, bool):
+                raise TypeError(f"{self.op} requests need a static python "
+                                f"int power (one executable per power)")
             if self.power < 0:
                 raise ValueError("negative powers not supported")
+        if self.dists is not None:
+            d = self.dists
+            if d.ndim != 2 or d.shape[0] < 1 or d.shape[1] != a.shape[0]:
+                raise ValueError(f"dists must be a (B, n) stack matching "
+                                 f"the (n, n) operand, got dists shape "
+                                 f"{d.shape} for n = {a.shape[0]}")
+            if d.dtype != a.dtype:
+                raise ValueError(f"dists dtype {d.dtype.name} must match "
+                                 f"operand dtype {a.dtype.name}")
 
     @property
     def n(self) -> int:
         return self.operand.shape[0]
 
+    @property
+    def payload(self):
+        """What the bucket assembler stacks for this request: the operand,
+        or the (operand, dists) pair for evolve requests."""
+        return self.operand if self.dists is None \
+            else (self.operand, self.dists)
+
     def bucket_key(self) -> tuple:
         """(op, n, dtype, power) — the group this request batches with.
-        expm has no power, so every expm request of one (n, dtype) shares
-        a bucket."""
-        power = self.power if self.op == "matpow" else -1
+        expm and markov steady-state have no power, so every such request
+        of one (n, dtype) shares a bucket (power slot -1); markov evolve
+        requests carry ``("evolve", steps, B)`` in the power slot — the
+        horizon and distribution count are executable-shape parameters,
+        so they key the traffic class like a matpow power does."""
+        if self.op == "matpow":
+            power = self.power
+        elif self.op == "markov" and self.dists is not None:
+            power = ("evolve", self.power, self.dists.shape[0])
+        else:
+            power = -1
         return (self.op, self.n, self.operand.dtype.name, power)
 
 
@@ -342,14 +399,36 @@ def _assemble(operands, *, bpad: int):
     return stack
 
 
+# Evolve-bucket twin of ``_assemble``: stacks each request's (operand,
+# dists) pair into a ((bpad, n, n), (bpad, B, n)) pair in one dispatch.
+# Filler slots are zero matrices/stacks, same as ``_assemble``.
+@functools.partial(jax.jit, static_argnames=("bpad",))
+def _assemble_pairs(mats, dists, *, bpad: int):
+    mstack = jnp.stack(mats)
+    dstack = jnp.stack(dists)
+    b = mstack.shape[0]
+    if bpad > b:
+        n = mstack.shape[-1]
+        mstack = jnp.concatenate(
+            [mstack, jnp.zeros((bpad - b, n, n), mstack.dtype)])
+        dstack = jnp.concatenate(
+            [dstack, jnp.zeros((bpad - b,) + dstack.shape[1:],
+                               dstack.dtype)])
+    return mstack, dstack
+
+
 # One-dispatch result scatter: slicing B rows off a bucket result with
 # eager ``out[j]`` indexing costs one dispatch per request (~100 us each on
 # CPU — measured to dominate the flush); this jitted splitter materializes
 # all B per-request answers in a single call. No donation: the row outputs
 # are strictly smaller than the stacked input, so XLA could never alias it.
+# Pytree-general (tree_map over an array leaf is the old ``out[j]``): a
+# markov steady-state bucket's result is a stacked SteadyStateResult, and
+# each request resolves with its own per-member slice of every field.
 @functools.partial(jax.jit, static_argnames=("b",))
 def _split_rows(out, *, b: int):
-    return tuple(out[j] for j in range(b))
+    return tuple(jax.tree_util.tree_map(lambda leaf: leaf[j], out)
+                 for j in range(b))
 
 
 def bucket_batch(b: int, max_batch: int = 64) -> int:
@@ -572,8 +651,14 @@ class MatFnEngine:
 
     # -- request intake ----------------------------------------------------
     def submit(self, op: str, operand, *, power: int = 1,
-               priority: str = "bulk", tenant: Optional[str] = None):
+               dists=None, priority: str = "bulk",
+               tenant: Optional[str] = None):
         """Queue one request.
+
+        ``dists`` (op="markov" only) selects the evolve traffic class: a
+        (B, n) stack of start distributions evolved ``power`` transitions
+        under ``operand``; without it a markov request answers the
+        steady-state query (:class:`~repro.core.markov.SteadyStateResult`).
 
         Synchronous mode returns the request's int index into the next
         ``flush()``; daemon mode (after :meth:`start`) returns a
@@ -620,7 +705,14 @@ class MatFnEngine:
             canon = jax.dtypes.canonicalize_dtype(operand.dtype)
             if canon != operand.dtype:
                 operand = jnp.asarray(operand, canon)
-        req = MatFnRequest(op, operand, power)
+        if dists is not None:
+            if not isinstance(dists, (jax.Array, np.ndarray)):
+                dists = jnp.asarray(dists)
+            elif isinstance(dists, np.ndarray):
+                canon = jax.dtypes.canonicalize_dtype(dists.dtype)
+                if canon != dists.dtype:
+                    dists = jnp.asarray(dists, canon)
+        req = MatFnRequest(op, operand, power, dists)
         # Mode check under the lock: a concurrent start() must never see
         # _pending empty and then have a sync request appended behind its
         # back — that ticket could never resolve (the daemon only serves
@@ -843,7 +935,8 @@ class MatFnEngine:
             lambda: autotune.fastmm_config(
                 dtype=None if dtype is None else dtype)[0])
 
-    def route_for(self, n: int, batch: int, dtype=None) -> str:
+    def route_for(self, n: int, batch: int, dtype=None,
+                  power=None) -> str:
         """Heterogeneous dispatch: which executor serves an (n, batch) bucket.
 
         ``sharded`` (mesh-resident chain) only ever takes single huge
@@ -852,8 +945,15 @@ class MatFnEngine:
         local routes. Huge-n buckets above the autotuned Strassen crossover
         (and not sharded-eligible) take ``fastmm`` — the only
         tolerance-bounded route; everything else is bit-identical to
-        per-matrix calls.
+        per-matrix calls. Markov evolve buckets (``power`` slot
+        ``("evolve", steps, B)``) always take the fifth ``evolve`` route —
+        vector-matrix work has its own stream so a distribution sweep
+        never queues behind dense-square buckets; whether a big-B member
+        internally falls back to the dense path is the autotuned
+        ``markov`` threshold's call, not the router's.
         """
+        if _is_evolve(power):
+            return "evolve"
         cpu_max_n, sharded_min_n = self.thresholds_for(dtype)
         if self.mesh is not None and batch == 1 and n >= sharded_min_n:
             return "sharded"
@@ -890,7 +990,59 @@ class MatFnEngine:
         if exe is not None:
             self.stats["cache_hits"] += 1
             return key, exe, False
-        if route == "sharded":
+        if op == "markov" and _is_evolve(power):
+            # The evolve route: one jitted program mapping each (operand,
+            # dists) pair through the binary-decomposition vector-matrix
+            # chain. lax.map for the same reason as expm below — compile
+            # size stays O(1) in the bucket batch, and each member's
+            # big-B dense fallback decision (the autotuned ``markov``
+            # threshold, resolved at trace time) is per-shape anyway.
+            from repro.core.markov import evolve_distributions
+            steps = power[1]
+            cpu_max_n, _ = self.thresholds_for(dtype)
+            backend = "xla" if n <= cpu_max_n else self._chain_backend
+
+            def per_member(pair):
+                mat, dist = pair
+                return evolve_distributions(dist, mat, steps,
+                                            backend=backend, validate=False)
+
+            # Donate the dists stack only: the (bpad, B, n) output aliases
+            # it exactly, while the (bpad, n, n) matrix stack could never
+            # alias and would only warn.
+            jitted = jax.jit(lambda mats, dists: lax.map(per_member,
+                                                         (mats, dists)),
+                             donate_argnums=1)
+            exe = lambda pair: jitted(*pair)
+        elif op == "markov" and route == "sharded":
+            # Mesh-resident steady state: the convergence loop runs on a
+            # ShardedMatmulChain (pad + 2-D sharding committed once, every
+            # squaring a donated collective step) — same structure as
+            # expm_sharded's loop. The chain drives its own jitted steps;
+            # no outer jit, no batch dim (single matrix by construction).
+            from repro.core.distributed import ShardedMatmulChain
+            from repro.core.markov import steady_state
+            mesh = self.mesh
+            chain = ShardedMatmulChain(n, jnp.dtype(dtype), mesh,
+                                       donate=False)
+            exe = lambda x: jax.tree_util.tree_map(
+                lambda leaf: leaf[None],
+                steady_state(x[0], validate=False, chain=chain))
+        elif op == "markov":
+            # Steady state on the local routes: lax.map of the per-matrix
+            # convergence loop, so every bucket member keeps its OWN
+            # squaring count (a stacked loop would square everyone to the
+            # slowest mixer) and answers stay bit-identical to per-matrix
+            # steady_state calls.
+            from repro.core.markov import steady_state
+            backend = (self._chain_backend if route == "chain"
+                       else self._fastmm_backend if route == "fastmm"
+                       else "xla")
+            per_matrix = functools.partial(steady_state, validate=False,
+                                           backend=backend)
+            exe = jax.jit(lambda x: lax.map(per_matrix, x),
+                          donate_argnums=0)
+        elif route == "sharded":
             # The sharded chain drives its own jitted collective steps (one
             # compiled step shared per mesh/shape) — no outer jit, and no
             # batch dim: the bucket is a single matrix by construction.
@@ -945,6 +1097,11 @@ class MatFnEngine:
         lands on the thread that will serve the route, streams warm in
         parallel, and a fresh stream's first post-warm flush pays zero
         compiles. Synchronous engines warm on the calling thread.
+
+        ``op="markov"`` warms the steady-state class (zero-matrix filler
+        converges after one squaring, so warm chunks are cheap). Evolve
+        classes are keyed on the (steps, B) pair, which warm has no
+        argument for — their first bucket pays its own compile.
         """
         dtype = jnp.dtype(dtype)
         if batches is None:
@@ -989,11 +1146,18 @@ class MatFnEngine:
         tracing, per-stage spans on the executing thread's track.
         """
         b = len(operands)
-        route = self.route_for(n, b, dtype)
+        route = self.route_for(n, b, dtype, power)
         bpad = 1 if route == "sharded" else bucket_batch(b, self.max_batch)
         clk = self._clock.now
         t0 = clk()
-        stack = _assemble(tuple(operands), bpad=bpad)
+        if _is_evolve(power):
+            # Evolve operands are (operand, dists) pairs (see
+            # MatFnRequest.payload); both stacks assemble in one dispatch.
+            stack = _assemble_pairs(tuple(m for m, _ in operands),
+                                    tuple(d for _, d in operands),
+                                    bpad=bpad)
+        else:
+            stack = _assemble(tuple(operands), bpad=bpad)
         key, exe, fresh = self._executable(op, route, bpad, n, dtype, power)
         t1 = clk()
         if self.profile:
@@ -1058,7 +1222,7 @@ class MatFnEngine:
             for lo in range(0, len(members), self.max_batch):
                 chunk = members[lo:lo + self.max_batch]
                 rows = self._run_chunk(op, n, dtype, power,
-                                       [req.operand for _, req in chunk])
+                                       [req.payload for _, req in chunk])
                 for (idx, _), row in zip(chunk, rows):
                     results[idx] = row
         return results  # type: ignore[return-value]
@@ -1396,7 +1560,7 @@ class MatFnEngine:
         """
         op, n, dtype, power = bucket.key
         route = self.route_for(n, min(len(bucket.members), self.max_batch),
-                               dtype)
+                               dtype, power)
         if self.tracer.enabled:
             # The batching phase: bucket open (first member's arrival) ->
             # this dispatch decision, tagged with WHY it flushed.
@@ -1565,7 +1729,7 @@ class MatFnEngine:
                 # the bound attribute) — the single execution core shared
                 # with the synchronous flush().
                 return self._run_chunk(op, n, dtype, power,
-                                       [req.operand for _, req in chunk])
+                                       [req.payload for _, req in chunk])
 
             def on_retry(attempt, exc):
                 self._evict_class_executables(bucket.key)
@@ -1705,6 +1869,30 @@ class MatFnEngine:
         """Synchronous e^A through the engine (flushes the queue; in daemon
         mode kicks the scheduler and waits on the future)."""
         ticket = self.submit("expm", a)
+        if isinstance(ticket, MatFnFuture):
+            self.kick(ticket.bucket_key)
+            return ticket.result()
+        return self.flush()[ticket]
+
+    def steady_state(self, p: jax.Array):
+        """Synchronous stationary distribution through the engine —
+        resolves with a :class:`~repro.core.markov.SteadyStateResult`
+        (flushes the queue; in daemon mode kicks the scheduler and waits
+        on the future). The engine does not validate stochasticity; gate
+        with :func:`repro.core.markov.validate_stochastic` first."""
+        ticket = self.submit("markov", p)
+        if isinstance(ticket, MatFnFuture):
+            self.kick(ticket.bucket_key)
+            return ticket.result()
+        return self.flush()[ticket]
+
+    def evolve(self, dists: jax.Array, p: jax.Array,
+               steps: int) -> jax.Array:
+        """Synchronously evolve a (B, n) distribution stack ``steps``
+        transitions under ``p`` through the engine's evolve route
+        (flushes the queue; in daemon mode kicks the scheduler and waits
+        on the future)."""
+        ticket = self.submit("markov", p, power=steps, dists=dists)
         if isinstance(ticket, MatFnFuture):
             self.kick(ticket.bucket_key)
             return ticket.result()

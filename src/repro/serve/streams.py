@@ -66,8 +66,10 @@ __all__ = ["DEFAULT_ROUTES", "ExecutionStreams", "StreamPool",
 
 #: Dispatch routes the default stream layout covers, in stream order
 #: (mirrors ``repro.serve.matfn.ROUTES``; duplicated here because matfn
-#: imports this module).
-DEFAULT_ROUTES = ("xla", "chain", "sharded", "fastmm")
+#: imports this module). ``evolve`` is the markov distribution-evolution
+#: route — (B, n) vector-matrix chains, a different kernel shape from the
+#: dense-square routes, so it gets its own stream by default too.
+DEFAULT_ROUTES = ("xla", "chain", "sharded", "fastmm", "evolve")
 
 
 class StreamCrashed(RuntimeError):
@@ -94,10 +96,11 @@ class ExecutionStreams:
                  through a single worker (the PR 6 schedule), and counts
                  above ``len(routes)`` leave the extra workers idle.
     ``routes``   the route names, in stream-assignment order: route ``i``
-                 runs on stream ``i % streams``. With the default four
-                 and ``streams=2``, ``xla`` and ``sharded`` share stream
-                 0 while the two heavy chain routes (``chain`` and
-                 ``fastmm``) share stream 1.
+                 runs on stream ``i % streams``. With the default five
+                 and ``streams=2``, ``xla``, ``sharded``, and the cheap
+                 markov ``evolve`` route share stream 0 while the two
+                 heavy chain routes (``chain`` and ``fastmm``) share
+                 stream 1.
     """
 
     streams: int = len(DEFAULT_ROUTES)

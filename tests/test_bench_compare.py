@@ -100,7 +100,8 @@ class TestCheckFile:
 
     def test_specs_cover_all_committed_bench_files(self):
         assert set(SPECS) == {"BENCH_matpow.json", "BENCH_distributed.json",
-                              "BENCH_matfn.json", "BENCH_fastmm.json"}
+                              "BENCH_matfn.json", "BENCH_fastmm.json",
+                              "BENCH_markov.json"}
 
 
 class TestMainCLI:

@@ -283,3 +283,22 @@ def test_expm_sharded_matches_single_device():
         assert np.abs(gotj - want).max() / np.abs(want).max() < 1e-4
         print("ok")
     """)
+
+
+def test_expm_sharded_mask_no_nan_near_overflow():
+    # Companion to TestExpm.test_batched_mask_no_nan_near_overflow: the
+    # sharded squaring loop carries the same per-step mask, so it gets the
+    # same near-overflow guard — e^{60 I} pushes every squaring to within
+    # one step of fp32 overflow and must come out exact and NaN-free.
+    _run("""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.core import expm_sharded
+        mesh = _make_mesh((2, 2), ("data", "model"))
+        a = jnp.asarray(60.0 * np.eye(64, dtype=np.float32))
+        got = np.asarray(expm_sharded(a, mesh))
+        assert np.isfinite(got).all()
+        np.testing.assert_allclose(np.diag(got),
+                                   np.full(64, np.exp(np.float32(60.0))),
+                                   rtol=1e-5)
+        print("ok")
+    """)

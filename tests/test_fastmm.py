@@ -209,7 +209,7 @@ class TestChainFastPath:
 
 class TestEngineDispatch:
     def test_huge_n_bucket_takes_fastmm_route(self, tmp_cache):
-        assert ROUTES == ("xla", "chain", "sharded", "fastmm")
+        assert ROUTES == ("xla", "chain", "sharded", "fastmm", "evolve")
         autotune.record_fastmm(128, 2)
         eng = MatFnEngine()
         assert eng.route_for(16, 1) == "xla"

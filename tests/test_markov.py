@@ -1,0 +1,312 @@
+"""Markov/stochastic workload pack: core properties + serving end-to-end.
+
+Property layer: ``steady_state``'s pi is the dominant left eigenvector;
+its convergence-aware squaring chain is bit-identical to
+``matpow_binary(p, 2**k)`` at equal squaring counts on the same backend;
+``evolve_distributions`` matches a per-step dense loop and its big-B
+dense fallback. Gate layer: ``validate_stochastic`` rejection and repair.
+Serving layer: ``op="markov"`` rides the full engine path (submit ->
+bucket -> route -> stream -> resolve) in sync and daemon modes with
+request/execute spans tagged, and the evolve traffic class lands on its
+own route.
+"""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from _hypothesis_compat import given, settings, strategies as st
+
+from repro.core import (SteadyStateResult, evolve_distributions,
+                        markov_power, matpow_binary, steady_state,
+                        validate_stochastic)
+from repro.kernels import autotune
+from repro.serve.matfn import MatFnEngine
+from repro.serve.scheduler import ManualClock
+
+pytestmark = pytest.mark.timeout(300)
+
+SET = dict(max_examples=15, deadline=None)
+TIMEOUT = 30.0
+#: xla/chain crossover used by the engine tests: n <= 16 -> xla.
+THRESHOLDS = (16, 1 << 30)
+
+
+@pytest.fixture
+def tmp_cache(tmp_path, monkeypatch):
+    path = tmp_path / "autotune.json"
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(path))
+    autotune.clear_memory_cache()
+    yield path
+    autotune.clear_memory_cache()
+
+
+def _stochastic(n, seed, dtype=jnp.float32):
+    rng = np.random.default_rng(seed)
+    m = rng.random((n, n)) + 0.05        # strictly positive -> ergodic
+    return jnp.asarray(m / m.sum(axis=1, keepdims=True), dtype)
+
+
+def _eig_pi(p):
+    """fp64 oracle: the left eigenvector of the (unique, for strictly
+    positive P) dominant eigenvalue 1, normalized to a distribution."""
+    w, v = np.linalg.eig(np.asarray(p, np.float64).T)
+    pi = np.abs(v[:, int(np.argmax(w.real))].real)
+    return pi / pi.sum()
+
+
+class TestValidateStochastic:
+    def test_valid_matrix_passes_through(self):
+        p = _stochastic(6, 0)
+        assert np.array_equal(np.asarray(validate_stochastic(p)),
+                              np.asarray(p))
+
+    def test_rejects_negative_entries(self):
+        p = np.array(_stochastic(4, 1))
+        p[0, 0] -= 0.5
+        p[0, 1] += 0.5
+        with pytest.raises(ValueError, match="non-negative"):
+            validate_stochastic(jnp.asarray(p))
+
+    def test_rejects_bad_row_sums(self):
+        p = np.asarray(_stochastic(4, 2)) * 1.5
+        with pytest.raises(ValueError, match="sum to 1"):
+            validate_stochastic(jnp.asarray(p))
+
+    def test_renormalize_repairs_row_sums(self):
+        p = np.asarray(_stochastic(5, 3)) * 1.7
+        fixed = validate_stochastic(jnp.asarray(p), renormalize=True)
+        np.testing.assert_allclose(np.asarray(fixed).sum(axis=1), 1.0,
+                                   atol=1e-6)
+
+    def test_renormalize_rejects_nonpositive_rows(self):
+        p = np.zeros((3, 3), np.float32)
+        p[1:] = np.asarray(_stochastic(3, 4))[1:]
+        with pytest.raises(ValueError, match="renormalize"):
+            validate_stochastic(jnp.asarray(p), renormalize=True)
+
+    def test_rejects_non_square(self):
+        with pytest.raises(ValueError, match="square"):
+            validate_stochastic(jnp.ones((3, 4)) / 4)
+
+    def test_traced_input_raises_typeerror(self):
+        p = _stochastic(4, 5)
+        with pytest.raises(TypeError, match="host-side"):
+            jax.jit(validate_stochastic)(p)
+
+
+class TestSteadyState:
+    @given(st.integers(2, 12), st.integers(0, 1000))
+    @settings(**SET)
+    def test_pi_is_dominant_left_eigenvector(self, n, seed):
+        p = _stochastic(n, seed)
+        res = steady_state(p, tol=1e-7)
+        np.testing.assert_allclose(np.asarray(res.pi, np.float64),
+                                   _eig_pi(p), atol=5e-5)
+        # stationarity: pi P = pi
+        drift = np.abs(np.asarray(res.pi) @ np.asarray(p)
+                       - np.asarray(res.pi)).max()
+        assert drift < 5e-6
+
+    def test_early_exit_beats_fixed_policy(self):
+        res = steady_state(_stochastic(16, 7), tol=1e-6)
+        assert 0 < int(res.squarings) < 20       # the CI-gated win
+        assert float(res.residual) <= 1e-6       # exited by convergence
+
+    @pytest.mark.parametrize("backend", ["xla", "pallas_chain_interpret"])
+    def test_bit_identical_to_matpow_at_equal_squarings(self, backend):
+        p = _stochastic(24, 11)
+        res = steady_state(p, tol=1e-6, backend=backend)
+        k = int(res.squarings)
+        want = matpow_binary(p, 1 << k, backend=backend)
+        assert np.array_equal(np.asarray(res.matrix), np.asarray(want))
+
+    def test_cap_exit_reports_residual_above_tol(self):
+        res = steady_state(_stochastic(8, 13), tol=0.0, max_squarings=3)
+        assert int(res.squarings) == 3
+        assert float(res.residual) > 0.0         # cap, not convergence
+
+    def test_single_state_chain(self):
+        res = steady_state(jnp.ones((1, 1)))
+        assert np.asarray(res.pi) == np.asarray([1.0])
+
+    def test_rejects_batches(self):
+        with pytest.raises(ValueError, match="one"):
+            steady_state(jnp.stack([_stochastic(4, 0), _stochastic(4, 1)]))
+
+    def test_result_is_named_tuple_pytree(self):
+        res = steady_state(_stochastic(4, 17))
+        assert isinstance(res, SteadyStateResult)
+        leaves = jax.tree_util.tree_leaves(res)
+        assert len(leaves) == 4
+
+    def test_markov_power_matches_numpy(self):
+        p = _stochastic(6, 19)
+        got = np.asarray(markov_power(p, 13))
+        ref = np.linalg.matrix_power(np.asarray(p, np.float64), 13)
+        np.testing.assert_allclose(got, ref, rtol=1e-4, atol=1e-6)
+
+
+class TestEvolveDistributions:
+    @given(st.integers(0, 40), st.integers(1, 6), st.integers(0, 1000))
+    @settings(**SET)
+    def test_matches_dense_step_loop(self, steps, b, seed):
+        n = 7
+        p = _stochastic(n, seed)
+        rng = np.random.default_rng(seed + 1)
+        d = rng.random((b, n)).astype(np.float32)
+        d /= d.sum(axis=1, keepdims=True)
+        got = np.asarray(evolve_distributions(jnp.asarray(d), p, steps))
+        ref = np.asarray(d, np.float64)
+        p64 = np.asarray(p, np.float64)
+        for _ in range(steps):
+            ref = ref @ p64
+        np.testing.assert_allclose(got, ref, rtol=5e-4, atol=1e-5)
+
+    def test_single_distribution_keeps_shape(self):
+        p = _stochastic(5, 3)
+        d = jnp.ones((5,)) / 5
+        out = evolve_distributions(d, p, 9)
+        assert out.shape == (5,)
+        np.testing.assert_allclose(float(out.sum()), 1.0, atol=1e-5)
+
+    def test_zero_steps_is_identity(self):
+        p = _stochastic(4, 5)
+        d = jnp.asarray(np.eye(4, dtype=np.float32)[:2])
+        assert np.array_equal(np.asarray(evolve_distributions(d, p, 0)),
+                              np.asarray(d))
+
+    def test_dense_fallback_agrees(self, tmp_cache):
+        # Forcing the big-B regime (threshold ~0) must change only the
+        # schedule of multiplies, not the answer beyond fp32 noise.
+        p = _stochastic(8, 7)
+        d = jnp.asarray(np.random.default_rng(8).random((16, 8)),
+                        jnp.float32)
+        via_evolve = evolve_distributions(d, p, 21, dense_threshold=1e9)
+        via_dense = evolve_distributions(d, p, 21, dense_threshold=1e-9)
+        np.testing.assert_allclose(np.asarray(via_evolve),
+                                   np.asarray(via_dense),
+                                   rtol=1e-5, atol=1e-6)
+
+    def test_rejects_non_static_steps(self):
+        p = _stochastic(4, 9)
+        with pytest.raises(TypeError, match="static"):
+            evolve_distributions(jnp.ones((4,)) / 4, p, jnp.asarray(3))
+        with pytest.raises(ValueError, match=">= 0"):
+            evolve_distributions(jnp.ones((4,)) / 4, p, -1)
+
+    def test_rejects_mismatched_n(self):
+        with pytest.raises(ValueError, match="feature dim"):
+            evolve_distributions(jnp.ones((5,)) / 5, _stochastic(4, 0), 2)
+
+    def test_autotuned_threshold_round_trip(self, tmp_cache):
+        assert autotune.markov_evolve_threshold(jnp.float32) == \
+            autotune.DEFAULT_MARKOV_EVOLVE_THRESHOLD
+        autotune.record_markov_evolve_threshold(2.5, dtype=jnp.float32)
+        assert autotune.markov_evolve_threshold(jnp.float32) == 2.5
+        with pytest.raises(ValueError):
+            autotune.record_markov_evolve_threshold(0.0)
+
+
+class TestEngineMarkov:
+    def _engine(self, clock=None, **kw):
+        kw.setdefault("thresholds", THRESHOLDS)
+        kw.setdefault("max_batch", 16)
+        return MatFnEngine(clock=clock, **kw)
+
+    def test_sync_steady_state_bit_identical_to_core(self, tmp_cache):
+        eng = self._engine()
+        p = _stochastic(8, 21)
+        got = eng.steady_state(p)
+        want = steady_state(p, validate=False)
+        assert np.array_equal(np.asarray(got.pi), np.asarray(want.pi))
+        assert np.array_equal(np.asarray(got.matrix),
+                              np.asarray(want.matrix))
+        assert int(got.squarings) == int(want.squarings)
+
+    def test_sync_bucket_keeps_per_member_convergence(self, tmp_cache):
+        # Three same-shape steady-state queries share one bucket, but each
+        # member keeps its OWN squaring count and exact per-matrix answer
+        # (the executable maps the while-loop per member).
+        eng = self._engine()
+        mats = [_stochastic(8, s) for s in (31, 32, 33)]
+        idx = [eng.submit("markov", p) for p in mats]
+        results = eng.flush()
+        assert eng.stats()["buckets"] == 1
+        for i, p in zip(idx, mats):
+            want = steady_state(p, validate=False)
+            got = results[i]
+            assert np.array_equal(np.asarray(got.pi), np.asarray(want.pi))
+            assert int(got.squarings) == int(want.squarings)
+
+    def test_sync_evolve_matches_core(self, tmp_cache):
+        eng = self._engine()
+        p = _stochastic(8, 41)
+        d = jnp.asarray(np.random.default_rng(42).random((4, 8)),
+                        jnp.float32)
+        got = eng.evolve(d, p, 17)
+        want = evolve_distributions(d, p, 17, validate=False)
+        assert np.array_equal(np.asarray(got), np.asarray(want))
+
+    def test_steady_state_routes_to_chain_above_threshold(self, tmp_cache):
+        eng = self._engine(interpret=True)
+        p = _stochastic(32, 43)              # 32 > cpu_max_n = 16 -> chain
+        got = eng.steady_state(p)
+        assert eng.stats()["routes"]["chain"] == 1
+        want = steady_state(p, validate=False,
+                            backend="pallas_chain_interpret")
+        assert np.array_equal(np.asarray(got.matrix),
+                              np.asarray(want.matrix))
+
+    def test_warm_precompiles_steady_state_class(self, tmp_cache):
+        eng = self._engine()
+        eng.warm("markov", 8)
+        compiles = eng.stats()["compiles"]
+        eng.steady_state(_stochastic(8, 47))
+        assert eng.stats()["compiles"] == compiles
+
+    def test_submit_validates_dists(self, tmp_cache):
+        eng = self._engine()
+        p = _stochastic(8, 51)
+        with pytest.raises(ValueError, match="only meaningful"):
+            eng.submit("matpow", p, power=2, dists=jnp.ones((2, 8)) / 8)
+        with pytest.raises(ValueError):
+            eng.submit("markov", p, power=2, dists=jnp.ones((2, 5)) / 5)
+
+    def test_daemon_end_to_end_with_spans(self, tmp_cache):
+        # The acceptance path: markov requests flow submit -> bucket ->
+        # route -> stream -> resolve under the daemon scheduler, steady
+        # state and evolve land on their own routes, and the trace tags
+        # both the request spans and the per-route execute spans.
+        clock = ManualClock()
+        eng = self._engine(clock, trace=True)
+        p0, p1 = _stochastic(8, 61), _stochastic(8, 62)
+        d = jnp.asarray(np.random.default_rng(63).random((4, 8)),
+                        jnp.float32)
+        with eng:
+            futs = [eng.submit("markov", p0),
+                    eng.submit("markov", p1),
+                    eng.submit("markov", p0, power=33, dists=d),
+                    eng.submit("matpow", p0, power=3)]
+            clock.advance(10.0)              # fire every bucket deadline
+            steady0 = futs[0].result(timeout=TIMEOUT)
+            steady1 = futs[1].result(timeout=TIMEOUT)
+            evolved = futs[2].result(timeout=TIMEOUT)
+            futs[3].result(timeout=TIMEOUT)
+            snap = eng.stats()
+            spans = eng.tracer.spans()
+        want0 = steady_state(p0, validate=False)
+        assert np.array_equal(np.asarray(steady0.pi), np.asarray(want0.pi))
+        assert int(steady1.squarings) > 0
+        assert np.array_equal(
+            np.asarray(evolved),
+            np.asarray(evolve_distributions(d, p0, 33, validate=False)))
+        assert snap["routes"]["evolve"] == 1
+        assert snap["routes"]["xla"] >= 2    # steady bucket + matpow
+        markov_tagged = [s for s in spans
+                         if s["args"].get("op") == "markov"]
+        assert len(markov_tagged) >= 3       # request + execute coverage
+        exec_routes = {s["args"]["route"] for s in markov_tagged
+                       if "route" in s["args"]}
+        assert {"xla", "evolve"} <= exec_routes

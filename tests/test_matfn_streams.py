@@ -118,29 +118,32 @@ class _Wedge:
 class TestExecutionStreamsConfig:
     def test_default_one_stream_per_route(self):
         cfg = ExecutionStreams()
-        assert cfg.streams == 4
-        assert cfg.routes == ("xla", "chain", "sharded", "fastmm")
-        assert [cfg.stream_for(r) for r in cfg.routes] == [0, 1, 2, 3]
+        assert cfg.streams == 5
+        assert cfg.routes == ("xla", "chain", "sharded", "fastmm",
+                              "evolve")
+        assert [cfg.stream_for(r) for r in cfg.routes] == [0, 1, 2, 3, 4]
         assert cfg.routes_for(1) == ("chain",)
         assert "chain" in cfg.label(1)
         assert "fastmm" in cfg.label(3)
+        assert "evolve" in cfg.label(4)
 
     def test_streams_fold_onto_workers(self):
         cfg = ExecutionStreams(streams=2)
-        # xla and sharded share stream 0; the two heavy chain routes
-        # (chain and fastmm) share stream 1.
+        # xla, sharded, and the cheap markov evolve route share stream 0;
+        # the two heavy chain routes (chain and fastmm) share stream 1.
         assert cfg.stream_for("xla") == 0
         assert cfg.stream_for("chain") == 1
         assert cfg.stream_for("sharded") == 0
         assert cfg.stream_for("fastmm") == 1
-        assert cfg.routes_for(0) == ("xla", "sharded")
+        assert cfg.stream_for("evolve") == 0
+        assert cfg.routes_for(0) == ("xla", "sharded", "evolve")
         assert cfg.routes_for(1) == ("chain", "fastmm")
         one = ExecutionStreams(streams=1)
         assert {one.stream_for(r) for r in one.routes} == {0}
         # extra streams beyond the routes idle
-        wide = ExecutionStreams(streams=6)
-        assert wide.routes_for(5) == ()
-        assert "idle" in wide.label(5)
+        wide = ExecutionStreams(streams=7)
+        assert wide.routes_for(6) == ()
+        assert "idle" in wide.label(6)
 
     @pytest.mark.parametrize("bad", [0, -1, True, 1.5, "2"])
     def test_rejects_bad_stream_counts(self, bad):
@@ -158,7 +161,7 @@ class TestExecutionStreamsConfig:
     def test_engine_requires_route_coverage(self, tmp_cache):
         with pytest.raises(ValueError, match="missing"):
             MatFnEngine(streams=ExecutionStreams(routes=("xla", "chain")))
-        # all three dense routes but no fastmm: still not enough
+        # three dense routes but no fastmm/evolve: still not enough
         with pytest.raises(ValueError, match="missing"):
             MatFnEngine(streams=ExecutionStreams(
                 routes=("xla", "chain", "sharded")))
@@ -330,7 +333,7 @@ class TestFastmmStream:
             # the wedge holds the fastmm bucket BEFORE the chunk core, so
             # only the two dense routes have counted yet
             assert snap["routes"] == {"xla": 1, "chain": 1, "sharded": 0,
-                                      "fastmm": 0}
+                                      "fastmm": 0, "evolve": 0}
             assert snap["peak_concurrent_streams"] >= 2
             wedge.gate.set()
             got = fut_fast.result(timeout=TIMEOUT)

@@ -205,6 +205,30 @@ class TestExpm:
             np.asarray(expm(jnp.asarray(-a, jnp.float32)), np.float64)
         np.testing.assert_allclose(lhs, np.eye(6), atol=5e-4)
 
+    def test_batched_mask_no_nan_near_overflow(self):
+        """Regression: the squaring loop's per-member mask must be a
+        ``jnp.where`` select, not multiply-masking. In a batch, a member
+        that finishes its own squarings early still rides the loop to the
+        batch max; its wasted extra squaring can overflow fp32 (e^60 ~
+        1.14e26; one more squaring ~ 1.3e52 = inf), and under the old
+        ``keep * sq + (1 - keep) * r_cur`` form that inf hit ``0 * inf =
+        NaN``, corrupting the member's already-correct answer."""
+        small = 60.0 * np.eye(4, dtype=np.float32)    # e^60 finite in fp32
+        big = 100.0 * np.eye(4, dtype=np.float32)     # more squarings
+        batch = jnp.asarray(np.stack([small, big]))
+        out = np.asarray(expm(batch))
+        # the early-finishing member: exact, finite, no NaN
+        np.testing.assert_allclose(
+            np.diag(out[0]), np.full(4, np.exp(np.float32(60.0))),
+            rtol=1e-5)
+        assert np.isfinite(out[0]).all()
+        # e^100 legitimately overflows fp32 on the diagonal — but overflow
+        # is inf, never NaN
+        assert not np.isnan(out[1]).any()
+        # batching must not perturb the small member vs its solo answer
+        np.testing.assert_array_equal(out[0],
+                                      np.asarray(expm(jnp.asarray(small))))
+
 
 class TestPrefixScan:
     @given(st.integers(1, 33), st.integers(0, 1000))
